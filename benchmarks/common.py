@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,92 @@
+"""Paper Figs. 1-2 + Table I analog: validation loss/PPL vs training steps for
+DiLoCo / Streaming DiLoCo / CoCoDC, and steps-to-target-PPL.
+
+Scaled-down setting (CPU container): tiny LLaMA-style model, synthetic non-IID
+corpus; protocol constants keep the paper's RATIOS (K fragments, tau/h overlap
+pressure, gamma, lambda). The claim under test is the ORDERING and the step-count
+reduction, not absolute perplexities.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Timer, emit, save_json
+
+from repro.configs import CoCoDCConfig
+from repro.configs.base import ModelConfig
+from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+
+MODEL = ModelConfig(name="bench-lm", family="dense", n_layers=4, d_model=96,
+                    n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                    compute_dtype="float32")
+
+
+def protocol_cfg(method: str, steps: int) -> CoCoDCConfig:
+    """Aggressive-overlap regime: tau comparable to the sync interval h, so the
+    staleness/inconsistency the paper targets actually bites. The paper (§IV-B)
+    notes its own tau=5/H=100 setting is mild and that CoCoDC's advantages are
+    'expected to become significantly more pronounced' at larger H and tau —
+    this is that regime, scaled to CPU step counts."""
+    return CoCoDCConfig(num_workers=4, local_steps=24, num_fragments=4,
+                        overlap_depth=8, comp_lambda=0.5, net_utilization=0.4,
+                        mixing_alpha=0.5)
+
+
+def run_method(method: str, steps: int, seed: int = 0):
+    tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
+                         total_steps=steps, warmup_steps=steps // 10,
+                         inner_lr=3e-3, seed=seed, eval_batch=8,
+                         noniid_frac=0.3)
+    tr = CrossRegionTrainer(MODEL, protocol_cfg(method, steps), tcfg)
+    with Timer() as t:
+        hist = tr.run(eval_every=max(10, steps // 20), log=lambda s: None)
+    return {"history": hist, "stats": tr.engine.stats(), "host_s": t.dt,
+            "trainer": tr}
+
+
+def steps_to_ppl(hist, target):
+    for rec in hist:
+        if rec["ppl"] <= target:
+            return rec["step"]
+    return None
+
+
+def main(steps: int = 480, seeds=(0,)) -> dict:
+    out = {}
+    for method in ("diloco", "streaming", "cocodc"):
+        runs = []
+        for seed in seeds:
+            r = run_method(method, steps, seed)
+            runs.append({k: r[k] for k in ("history", "stats", "host_s")})
+        out[method] = runs
+        final = runs[0]["history"][-1]
+        emit(f"convergence/{method}",
+             runs[0]["host_s"] * 1e6 / steps,
+             f"final_ppl={final['ppl']:.2f};final_nll={final['nll']:.4f};"
+             f"sim_wall={runs[0]['stats']['wall_clock_s']:.0f}s")
+
+    # steps-to-target (Table I analog): the paper picks an absolute PPL (20.0)
+    # that every method reaches before the end; the equivalent here is the
+    # weakest method's best-so-far ppl — guaranteed reachable by all
+    worst_best = max(min(rec["ppl"] for rec in r[0]["history"])
+                     for r in out.values())
+    target = worst_best
+    table = {}
+    for method, runs in out.items():
+        s = steps_to_ppl(runs[0]["history"], target)
+        table[method] = s
+        emit(f"steps_to_ppl_{target:.1f}/{method}", 0.0,
+             f"steps={s}")
+    if table.get("cocodc") and table.get("streaming"):
+        red = 100 * (1 - table["cocodc"] / table["streaming"])
+        emit("cocodc_vs_streaming_step_reduction", 0.0, f"{red:.1f}%")
+    if table.get("cocodc") and table.get("diloco"):
+        red = 100 * (1 - table["cocodc"] / table["diloco"])
+        emit("cocodc_vs_diloco_step_reduction", 0.0, f"{red:.1f}%")
+    save_json("convergence", {"runs": out, "target_ppl": target,
+                              "steps_to_target": table})
+    return out
+
+
+if __name__ == "__main__":
+    main()

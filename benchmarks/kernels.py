@@ -1,0 +1,110 @@
+"""Kernel micro-benchmarks: oracle (pure-XLA) path timings on CPU + analytic TPU
+projections. The Pallas kernels themselves target TPU; on this CPU container they
+execute in interpret mode (correctness only), so us_per_call here times the
+ref/oracle path and `derived` carries the projected v5e-roofline time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+
+HBM_BW = 819e9          # v5e
+PEAK_FLOPS = 197e12
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> dict:
+    out = {}
+    key = jax.random.PRNGKey(0)
+
+    # delay_comp: memory-bound fused elementwise (3 reads + 1 write)
+    from repro.kernels.delay_comp.ref import delay_comp_ref
+    n = 4_000_000
+    tl, tp, tg = (jax.random.normal(jax.random.fold_in(key, i), (n,))
+                  for i in range(3))
+    f = jax.jit(lambda a, b, c: delay_comp_ref(a, b, c, tau=5.0, lam=0.5, H=100.0))
+    us = bench(f, tl, tp, tg)
+    tpu_us = 4 * n * 4 / HBM_BW * 1e6
+    emit("kernel/delay_comp_4M", us, f"tpu_roofline_us={tpu_us:.1f}")
+    out["delay_comp"] = {"cpu_us": us, "tpu_us": tpu_us}
+
+    # flash attention: compute-bound
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    B, S, H, KV, hd = 1, 1024, 8, 2, 128
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, KV, hd), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = bench(f, q, k, v)
+    flops = 2 * 2 * B * H * S * S // 2 * hd  # qk + pv, causal half
+    emit("kernel/flash_attn_1k", us, f"tpu_roofline_us={flops/PEAK_FLOPS*1e6:.1f}")
+    out["flash_attention"] = {"cpu_us": us}
+
+    # rglru scan: memory-bound recurrence
+    from repro.kernels.rglru_scan.ref import lru_scan_ref
+    B, T, D = 2, 2048, 1024
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 4), (B, T, D)))
+    b = jax.random.normal(jax.random.fold_in(key, 5), (B, T, D))
+    f = jax.jit(lambda a, b: lru_scan_ref(a, b))
+    us = bench(f, a, b)
+    tpu_us = 3 * B * T * D * 4 / HBM_BW * 1e6
+    emit("kernel/rglru_scan_2k", us, f"tpu_roofline_us={tpu_us:.1f}")
+    out["rglru_scan"] = {"cpu_us": us, "tpu_us": tpu_us}
+
+    # rwkv6 wkv scan
+    from repro.models.rwkv6 import wkv_scan_ref
+    B, T, H, hd = 1, 512, 8, 64
+    r, kk, vv = (jax.random.normal(jax.random.fold_in(key, i), (B, T, H, hd)) * 0.5
+                 for i in (6, 7, 8))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 9), (B, T, H, hd)))
+    u = jax.random.normal(jax.random.fold_in(key, 10), (H, hd)) * 0.1
+    f = jax.jit(lambda *xs: wkv_scan_ref(*xs)[0])
+    us = bench(f, r, kk, vv, w, u)
+    flops = 4 * B * T * H * hd * hd  # two rank-1 updates + matvec per step
+    emit("kernel/rwkv6_wkv_512", us, f"tpu_roofline_us={flops/PEAK_FLOPS*1e6:.2f}")
+    out["rwkv6_scan"] = {"cpu_us": us}
+
+    # fused rms_norm: memory-bound (2 passes -> 1)
+    from repro.kernels.rms_norm.ref import rms_norm_ref
+    x = jax.random.normal(jax.random.fold_in(key, 11), (8192, 4096))
+    w = jnp.ones((4096,))
+    f = jax.jit(lambda x, w: rms_norm_ref(x, w))
+    us = bench(f, x, w)
+    tpu_us = 2 * x.size * 4 / HBM_BW * 1e6
+    emit("kernel/rms_norm_8kx4k", us, f"tpu_roofline_us={tpu_us:.1f}")
+    out["rms_norm"] = {"cpu_us": us, "tpu_us": tpu_us}
+
+    # flash_decode: one token over a 32k ring cache — memory-bound on the cache
+    from repro.kernels.flash_decode.ref import flash_decode_ref
+    B, H, KV, hd, C = 4, 8, 2, 128, 8192
+    q = jax.random.normal(jax.random.fold_in(key, 12), (B, H, hd))
+    kc = jax.random.normal(jax.random.fold_in(key, 13), (B, C, KV, hd),
+                           jnp.bfloat16)
+    vc = jax.random.normal(jax.random.fold_in(key, 14), (B, C, KV, hd),
+                           jnp.bfloat16)
+    kv_pos = jnp.arange(C)
+    qpos = jnp.asarray(C - 1, jnp.int32)
+    f = jax.jit(lambda *a: flash_decode_ref(*a))
+    us = bench(f, q, kc, vc, kv_pos, qpos)
+    tpu_us = 2 * B * C * KV * hd * 2 / HBM_BW * 1e6  # read k+v once
+    emit("kernel/flash_decode_8k", us, f"tpu_roofline_us={tpu_us:.1f}")
+    out["flash_decode"] = {"cpu_us": us, "tpu_us": tpu_us}
+
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Roofline post-processing (deliverable g): read the dry-run JSONL artifacts and
+derive the three roofline terms per (arch x input shape) on the single-pod mesh.
+
+Methodology (see EXPERIMENTS.md §Roofline): XLA's HLO cost analysis counts a
+`while` (scan) body ONCE, so the full-depth scanned program under-reports. Each
+pair therefore also lowers depth-1 and depth-2 UNROLLED probes (full width, same
+sharding); per-depth-unit cost = C(2) - C(1), fixed cost = C(1) - per_unit, and
+full-program cost = fixed + units * per_unit. Collective bytes are parsed from
+the post-SPMD HLO (operand bytes of all-gather/all-reduce/reduce-scatter/
+all-to-all/collective-permute) and extrapolated identically.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.common import RESULTS_DIR, emit, save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def depth_units(cfg) -> int:
+    if cfg.block_pattern:
+        return cfg.n_layers // len(cfg.block_pattern)
+    return cfg.n_layers
+
+
+def active_params(cfg) -> float:
+    """6*N*D convention: non-embedding params; MoE counts only routed-active
+    experts (top_k/E of expert weights)."""
+    import jax
+    from repro.launch.steps import abstract_params
+    sds = abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+    total = 0.0
+    for path, leaf in flat:
+        p = "/".join(str(getattr(x, "key", x)) for x in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if p in ("embed", "lm_head"):
+            continue
+        if "/moe/w_" in p and cfg.moe:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        total += n
+    return total
+
+
+def model_flops(cfg, shape_name: str, chips: int) -> float:
+    """Per-device useful model FLOPs: 6*N_active*tokens (train: fwd+bwd),
+    2*N_active*tokens (inference)."""
+    n = active_params(cfg)
+    toks = SHAPE_TOKENS[shape_name]
+    mult = 6.0 if shape_name == "train_4k" else 2.0
+    return mult * n * toks / chips
+
+
+def load_records():
+    recs = []
+    for path in glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*.jsonl")):
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def extrapolate(full, p1, p2, units: int):
+    """Extrapolate a probe-measured metric to full depth."""
+    out = {}
+    for key in ("flops_per_device", "bytes_accessed_per_device",
+                "collective_bytes_per_device", "argument_bytes", "output_bytes",
+                "temp_bytes"):
+        c1, c2 = p1.get(key, 0.0), p2.get(key, 0.0)
+        per_unit = max(0.0, c2 - c1)
+        fixed = max(0.0, c1 - per_unit)
+        out[key] = fixed + units * per_unit
+    return out
+
+
+def main() -> dict:
+    from repro.configs import get_config
+    recs = load_records()
+    by_key = defaultdict(dict)
+    for r in recs:
+        if r.get("status") != "ok":
+            by_key[(r["arch"], r["shape"], r["mesh"])].setdefault("skip", r)
+            continue
+        k = (r["arch"], r["shape"], r["mesh"])
+        if "probe_depth" in r:
+            by_key[k][f"probe{r['probe_depth']}"] = r
+        else:
+            by_key[k]["full"] = r
+
+    table = []
+    for (arch, shape, mesh), entry in sorted(by_key.items()):
+        if mesh != "single_pod":
+            continue
+        if "skip" in entry and "full" not in entry:
+            table.append({"arch": arch, "shape": shape, "status": "skipped",
+                          "reason": entry["skip"].get("reason",
+                                                      entry["skip"].get("error"))})
+            continue
+        if not {"full", "probe1", "probe2"} <= set(entry):
+            table.append({"arch": arch, "shape": shape, "status": "incomplete"})
+            continue
+        cfg = get_config(arch.replace("-", "_").replace(".", "_"))
+        units = depth_units(cfg)
+        full = entry["full"]
+        ext = extrapolate(full, entry["probe1"], entry["probe2"], units)
+        chips = full["chips"]
+        t_comp = ext["flops_per_device"] / PEAK_FLOPS
+        # cost_analysis "bytes accessed" counts every HLO op operand with no
+        # fusion modeling -> UPPER bound on HBM traffic. The lower bound reads
+        # each argument/output/temp buffer once (perfect fusion).
+        t_mem = ext["bytes_accessed_per_device"] / HBM_BW
+        t_mem_lb = (ext["argument_bytes"] + ext["output_bytes"]
+                    + ext["temp_bytes"]) / HBM_BW
+        t_coll = ext["collective_bytes_per_device"] / LINK_BW
+        # dominant term judged with the LOWER memory bound (the upper bound
+        # would spuriously mark every program memory-bound; see EXPERIMENTS.md)
+        dominant = max((t_comp, "compute"), (t_mem_lb, "memory"),
+                       (t_coll, "collective"))[1]
+        mf = model_flops(cfg, shape, chips)
+        ratio = mf / ext["flops_per_device"] if ext["flops_per_device"] else 0.0
+        rec_txt = _recommend(cfg, shape, dominant, ratio)
+        rec = {
+            "arch": arch, "shape": shape, "status": "ok", "chips": chips,
+            "compute_s": t_comp, "memory_s": t_mem, "memory_lb_s": t_mem_lb,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_per_device": mf,
+            "hlo_flops_per_device": ext["flops_per_device"],
+            "useful_flops_ratio": ratio,
+            "peak_hbm_bytes": full.get("peak_bytes", 0),
+            "recommendation": rec_txt,
+        }
+        table.append(rec)
+        emit(f"roofline/{arch}/{shape}", 0.0,
+             f"compute={t_comp*1e3:.2f}ms;memory_ub={t_mem*1e3:.2f}ms;"
+             f"memory_lb={t_mem_lb*1e3:.2f}ms;"
+             f"collective={t_coll*1e3:.2f}ms;dominant={dominant};"
+             f"useful_ratio={ratio:.2f}")
+
+    save_json("roofline_table", table)
+    _write_markdown(table)
+    return {"table": table}
+
+
+def _recommend(cfg, shape, dominant, ratio) -> str:
+    """One sentence per (arch, shape): what would move the dominant term down."""
+    if dominant == "collective":
+        if cfg.moe is not None:
+            return ("Megatron row/column expert sharding removes one of the two "
+                    "partial-sum all-reduces per MoE layer (-37% measured, §Perf "
+                    "iter 3).")
+        if shape.startswith("decode") or shape == "long_500k":
+            return ("Batch the decode wider per chip or drop TP for the small "
+                    "per-token matmuls (DP profile) to amortize the per-layer "
+                    "d_model all-reduce.")
+        n = 1e9 if cfg.d_model <= 2048 else 1e10
+        if cfg.d_model <= 2048:
+            return ("Sub-2B model: pure-DP profile replaces per-layer TP "
+                    "all-reduces with one grad all-reduce (84x measured, §Perf "
+                    "iter 2).")
+        return ("Sequence-parallel TP (manual RS/AG around norms via shard_map) "
+                "halves activation all-reduce bytes; the single-constraint "
+                "shortcut regressed (§Perf iter 5).")
+    if dominant == "memory":
+        if shape.startswith("decode") or shape == "long_500k":
+            return ("Decode is cache/param-streaming bound: quantize KV to int8 "
+                    "or widen the batch so each param read serves more tokens.")
+        return ("Increase per-device arithmetic intensity: larger microbatch or "
+                "less remat; fuse norm/elementwise passes (rms_norm kernel).")
+    return ("Compute-bound at high useful-FLOPs ratio — at roofline; gains now "
+            "come from MXU utilization inside kernels (block shapes, bf16).")
+
+
+def _write_markdown(table):
+    lines = [
+        "| arch | shape | compute (ms) | memory ub (ms) | memory lb (ms) | "
+        "collective (ms) | dominant | useful-FLOPs ratio | what moves it down |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in table:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"{r.get('status')}: {r.get('reason','')} | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['memory_lb_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r.get('recommendation','')} |")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "roofline.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and saves full
+JSON artifacts under experiments/.
+
+  convergence — Figs. 1-2 + Table I (loss/PPL vs steps; steps-to-target)
+  wallclock   — §IV-B wall-clock claims across WAN regimes
+  ablations   — lambda / gamma / Eq-4-sign ablations
+  kernels     — Pallas-kernel oracle timings + TPU roofline projections
+  roofline    — deliverable (g): three-term roofline from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter convergence/ablation runs")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import ablations, convergence, kernels, roofline, wallclock
+
+    steps = 240 if args.fast else 480
+    ab_steps = 120 if args.fast else 240
+    jobs = {
+        "kernels": lambda: kernels.main(),
+        "wallclock": lambda: wallclock.main(),
+        "roofline": lambda: roofline.main(),
+        "convergence": lambda: convergence.main(steps=steps),
+        "ablations": lambda: ablations.main(steps=ab_steps),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failed = []
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            job()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: train a tiny LLaMA-style model across 4 simulated datacenters with
+CoCoDC (communication-computation overlap + delay compensation) and compare the
+consensus-model perplexity against plain DiLoCo.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import CoCoDCConfig, get_config
+from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+
+STEPS = 120
+
+
+def run(method: str):
+    mcfg = get_config("paper_150m").reduced()   # CPU-friendly variant
+    ccfg = CoCoDCConfig(num_workers=4, local_steps=20, num_fragments=4,
+                        overlap_depth=3)
+    tcfg = TrainerConfig(method=method, local_batch=4, seq_len=48,
+                         total_steps=STEPS, warmup_steps=10, inner_lr=3e-3)
+    tr = CrossRegionTrainer(mcfg, ccfg, tcfg)
+    tr.run(eval_every=30, log=lambda s: print("  " + s))
+    final = tr.history[-1]
+    stats = tr.engine.stats()
+    return final, stats
+
+
+def main():
+    print("== CoCoDC quickstart: 4 simulated DCs, H=20 local steps, tau=3 ==")
+    results = {}
+    for method in ("diloco", "cocodc"):
+        print(f"-- {method} --")
+        final, stats = run(method)
+        results[method] = (final, stats)
+    print("\nmethod    final_ppl   sim_wall_clock   comm_hidden")
+    for method, (final, stats) in results.items():
+        hidden = "yes (overlapped)" if method == "cocodc" else "no (blocking)"
+        print(f"{method:9s} {final['ppl']:9.2f}   {stats['wall_clock_s']:10.0f}s"
+              f"   {hidden}")
+    d, c = results["diloco"], results["cocodc"]
+    speedup = d[1]["wall_clock_s"] / c[1]["wall_clock_s"]
+    print(f"\nCoCoDC simulated wall-clock speedup over DiLoCo: {speedup:.2f}x "
+          f"(comm fully hidden under compute)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end driver (deliverable b): train a ~100M-class model for a few hundred
+steps across 4 simulated datacenters with the full stack — non-IID data pipeline,
+worker-stacked AdamW, CoCoDC protocol engine, consensus evaluation, checkpointing.
+
+By default runs the paper's 150M config at a CPU-tractable sequence length; pass
+--full-model to use the exact paper shape (needs a real accelerator for speed).
+
+    PYTHONPATH=src python examples/train_cross_region.py --steps 300
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--method", default="cocodc")
+    ap.add_argument("--full-model", action="store_true")
+    args = ap.parse_args()
+    argv = [
+        "--arch", "paper_150m",
+        "--method", args.method,
+        "--steps", str(args.steps),
+        "--workers", "4",
+        "--H", "100", "--fragments", "4", "--tau", "5",
+        "--local-batch", "4", "--seq-len", "64",
+        "--eval-every", "50",
+        "--ckpt", f"checkpoints/{args.method}_paper150m.msgpack",
+        "--history-out", f"experiments/train_{args.method}.json",
+    ]
+    if not args.full_model:
+        argv.append("--reduced")
+        argv.extend(["--lr", "3e-3"])
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

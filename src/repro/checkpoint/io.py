@@ -1,0 +1,56 @@
+"""Checkpointing: msgpack-serialized pytrees (params + inner/outer optimizer +
+protocol scheduler state), atomic writes, no external deps beyond msgpack.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_EXT_ND = 1
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype == jnp.bfloat16:
+            payload = msgpack.packb(
+                ("bfloat16", arr.shape, arr.astype(np.float32).tobytes()))
+        else:
+            payload = msgpack.packb((arr.dtype.str, arr.shape, arr.tobytes()))
+        return msgpack.ExtType(_EXT_ND, payload)
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _decode(code, data):
+    if code == _EXT_ND:
+        dtype, shape, buf = msgpack.unpackb(data)
+        if dtype == "bfloat16":
+            arr = np.frombuffer(buf, np.float32).reshape(shape)
+            return jnp.asarray(arr, jnp.bfloat16)
+        return np.frombuffer(buf, np.dtype(dtype)).reshape(shape).copy()
+    return msgpack.ExtType(code, data)
+
+
+def save_pytree(path: str, tree: Any):
+    """Atomic msgpack dump of a pytree of arrays/scalars/dicts/lists."""
+    plain = jax.tree.map(lambda a: np.asarray(a) if hasattr(a, "shape") else a, tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(plain, default=_encode, strict_types=False))
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def load_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read(), ext_hook=_decode, strict_map_key=False)

@@ -1,0 +1,39 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (CoCoDCConfig, InputShape, INPUT_SHAPES, ModelConfig,
+                                MoEConfig)
+
+ARCH_IDS = [
+    "dbrx_132b",
+    "llava_next_mistral_7b",
+    "qwen3_0_6b",
+    "rwkv6_3b",
+    "granite_moe_3b_a800m",
+    "llama3_405b",
+    "phi3_medium_14b",
+    "seamless_m4t_large_v2",
+    "command_r_35b",
+    "recurrentgemma_9b",
+    "paper_150m",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def canonical(arch_id: str) -> str:
+    a = arch_id.replace("-", "_").replace(".", "_")
+    if a not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_IDS)}")
+    return a
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch_id)}")
+    return mod.CONFIG
+
+
+__all__ = ["ARCH_IDS", "get_config", "canonical", "ModelConfig", "MoEConfig",
+           "CoCoDCConfig", "InputShape", "INPUT_SHAPES"]

@@ -1,0 +1,17 @@
+"""dbrx-132b — 16-expert top-4 fine-grained MoE. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    moe=MoEConfig(num_experts=16, top_k=4),
+    rope_theta=500_000.0,
+    long_decode_window=4096,   # long_500k sliding-window variant (DESIGN.md)
+    source="hf:databricks/dbrx-base",
+)

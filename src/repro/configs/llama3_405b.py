@@ -1,0 +1,16 @@
+"""llama3-405b — dense GQA, 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    rope_theta=500_000.0,
+    long_decode_window=4096,   # long_500k sliding-window variant (DESIGN.md)
+    source="arXiv:2407.21783",
+)

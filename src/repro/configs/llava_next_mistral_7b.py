@@ -1,0 +1,21 @@
+"""llava-next-mistral-7b — VLM; Mistral-7B backbone + anyres patch-embedding stub.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    rope_theta=1_000_000.0,
+    attn_window=4096,          # Mistral sliding window
+    # anyres tiling: base 24x24 grid + 4 tiles -> 2880 patch tokens, projected from
+    # the (stubbed) CLIP/SigLIP hidden size 1024 by a 2-layer MLP projector.
+    n_prefix_tokens=2880,
+    prefix_dim=1024,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

@@ -1,0 +1,15 @@
+"""phi3-medium-14b — RoPE SwiGLU GQA (kv=10). [arXiv:2404.14219]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab=100352,
+    long_decode_window=4096,   # long_500k sliding-window variant (DESIGN.md)
+    source="arXiv:2404.14219",
+)

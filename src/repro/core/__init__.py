@@ -1,0 +1,14 @@
+"""CoCoDC core: the paper's contribution.
+
+  fragments   — depth-wise model fragmentation (Streaming DiLoCo / CoCoDC)
+  outer_opt   — Nesterov outer optimizer on pseudo-gradients
+  delay_comp  — Algorithm 1 (Taylor-expansion staleness compensation)
+  adaptive    — Algorithm 2 + Eqs. 9-12 (adaptive transmission scheduling)
+  network     — WAN latency/bandwidth + compute-time model
+  protocol    — event-driven engines: DiLoCo / Streaming DiLoCo / CoCoDC
+"""
+from repro.core.adaptive import AdaptiveState, select_fragment, sync_interval, target_syncs  # noqa: F401
+from repro.core.delay_comp import blend, compensate  # noqa: F401
+from repro.core.fragments import Fragmenter, make_fragmenter  # noqa: F401
+from repro.core.network import NetworkModel, paper_network  # noqa: F401
+from repro.core.protocol import ProtocolEngine  # noqa: F401

@@ -1,0 +1,68 @@
+"""CoCoDC adaptive transmission (paper §III-B: Eqs. 9-12, Algorithm 2).
+
+Decides how often to initiate fragment syncs (Eq. 9/10) and which fragment goes
+next (Algorithm 2). The decision is a pure function of globally shared history
+(completed-sync steps and ||Delta^g_p|| metrics), so every worker computes the same
+schedule with zero coordination messages — exactly the paper's determinism claim,
+and the property test in tests/test_adaptive.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class AdaptiveState:
+    """Shared (deterministically replicated) scheduler state."""
+    K: int
+    H: int
+    # last completed-sync step per fragment (t_{p,b}); -inf-ish before first sync
+    last_sync: List[int] = None
+    # change-rate metric R_p (Eq. 11); fragments never synced get +inf priority
+    rate: List[float] = None
+
+    def __post_init__(self):
+        if self.last_sync is None:
+            self.last_sync = [-self.H] * self.K
+        if self.rate is None:
+            self.rate = [math.inf] * self.K
+
+
+def target_syncs(K: int, H: int, t_c: float, t_s: float, gamma: float) -> int:
+    """Eq. 9: N = max(K, floor(gamma * H * T_c / T_s))."""
+    if t_s <= 0:
+        return K
+    return max(K, math.floor(gamma * H * t_c / t_s))
+
+
+def sync_interval(H: int, N: int) -> int:
+    """Eq. 10: h = floor(H / N) local steps between initiations."""
+    return max(1, H // N)
+
+
+def update_rate(state: AdaptiveState, p: int, delta_norm: float, t_complete: int):
+    """Eq. 11 on sync completion: R_p = ||Delta^g_p||_2 / I_p with
+    I_p = t_complete - t_{p,b}."""
+    interval = max(1, t_complete - state.last_sync[p])
+    state.rate[p] = float(delta_norm) / interval
+    state.last_sync[p] = t_complete
+
+
+def select_fragment(state: AdaptiveState, t_current: int,
+                    in_flight: Optional[set] = None) -> int:
+    """Algorithm 2. in_flight fragments are excluded (can't double-send one
+    fragment's all-reduce on the single WAN channel)."""
+    in_flight = in_flight or set()
+    candidates = [p for p in range(state.K) if p not in in_flight]
+    if not candidates:
+        raise ValueError("all fragments in flight")
+    # anti-starvation: any fragment idle >= H steps goes first (lowest idx wins,
+    # deterministic)
+    for p in candidates:
+        if t_current - state.last_sync[p] >= state.H:
+            return p
+    # Eq. 12: argmax R_p (ties -> lowest index, deterministic)
+    best = max(candidates, key=lambda p: (state.rate[p], -p))
+    return best

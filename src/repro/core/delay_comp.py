@@ -1,0 +1,52 @@
+"""CoCoDC delay compensation (paper Algorithm 1, Eqs. 4-8) at the pytree level.
+
+Given, for one fragment p of one worker m:
+  theta_tl — local fragment now (step t_l)
+  theta_tp — local fragment snapshot at initiation (step t_p = t_l - tau)
+  theta_g  — freshly outer-updated global fragment state (consensus at t_p)
+
+    g      = sign * (theta_tl - theta_tp) / tau          (Eq. 4; sign: DESIGN.md §5)
+    g_corr = g + lam * g . g . (theta_g - theta_tp)/H    (Eq. 7, Hadamard)
+    out    = theta_g + tau * g_corr                      (Eq. 8)
+
+`impl="kernel"` routes through the fused Pallas kernel; "ref" is the jnp oracle
+(used on CPU and under jit inside the protocol engine).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.delay_comp.ops import delay_comp_array
+from repro.kernels.delay_comp.ref import delay_comp_ref
+
+
+def compensate(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
+               impl: str = "ref"):
+    """Pytree-level Algorithm 1. None leaves (absent from this fragment) pass
+    through as None."""
+
+    def fn(tl, tp, tg):
+        if tl is None:
+            return None
+        if impl == "kernel":
+            return delay_comp_array(tl, tp, tg, tau=tau, lam=lam, H=H, sign=sign)
+        return delay_comp_ref(tl, tp, tg, tau=tau, lam=lam, H=H, sign=sign)
+
+    flat_tl, treedef = jax.tree.flatten(theta_tl, is_leaf=lambda x: x is None)
+    flat_tp = treedef.flatten_up_to(theta_tp)
+    flat_tg = treedef.flatten_up_to(theta_g)
+    return treedef.unflatten([fn(a, b, c)
+                              for a, b, c in zip(flat_tl, flat_tp, flat_tg)])
+
+
+def blend(theta_local, theta_g, *, alpha: float):
+    """Streaming DiLoCo Eq. 3: (1-alpha)*local + alpha*global."""
+
+    def fn(l, g):
+        if l is None:
+            return None
+        return (1.0 - alpha) * l + alpha * g
+
+    flat_l, treedef = jax.tree.flatten(theta_local, is_leaf=lambda x: x is None)
+    flat_g = treedef.flatten_up_to(theta_g)
+    return treedef.unflatten([fn(l, g) for l, g in zip(flat_l, flat_g)])

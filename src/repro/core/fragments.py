@@ -1,0 +1,155 @@
+"""Model fragmentation along depth (Streaming DiLoCo / CoCoDC).
+
+The model is partitioned into K disjoint fragments. Layer-stacked leaves (leading
+axis == a known layer count) are split by layer rows — strided (layer l -> fragment
+l % K, the Streaming DiLoCo pattern) or contiguous. Non-stacked leaves (embeddings,
+heads, norms) are assigned wholesale to fragments, greedily balancing fragment bytes.
+
+The Fragmenter works on abstract shapes (eval_shape) so constructing it never
+allocates; extract/insert are pure jittable gathers/scatters with static indices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafPlan:
+    path: str
+    is_layered: bool
+    # layered: rows[p] = tuple of layer indices for fragment p
+    rows: Tuple[Tuple[int, ...], ...] | None
+    # non-layered: owning fragment
+    owner: int | None
+    nbytes_per_row: int
+    nbytes: int
+
+
+class Fragmenter:
+    def __init__(self, params_shape: Any, n_fragments: int,
+                 layer_counts: Sequence[int], *, strided: bool = True):
+        """params_shape: pytree of ShapeDtypeStruct (jax.eval_shape of init).
+        layer_counts: leading-dim sizes that mark a leaf as layer-stacked
+        (e.g. {n_layers, n_groups, n_enc_layers})."""
+        self.K = int(n_fragments)
+        counts = {int(c) for c in layer_counts if int(c) > 1}
+        leaves = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+        plans: List[_LeafPlan] = []
+        frag_bytes = np.zeros(self.K, dtype=np.int64)
+
+        # pass 1: layered leaves
+        pending_flat = []
+        for path, leaf in leaves:
+            p = _path_str(path)
+            nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize if leaf.shape else leaf.dtype.itemsize
+            layered = (len(leaf.shape) >= 2 and leaf.shape[0] in counts
+                       and p.split("/")[0] in ("layers", "encoder", "decoder",
+                                               "rem", "groups"))
+            if layered:
+                L = leaf.shape[0]
+                rows: List[List[int]] = [[] for _ in range(self.K)]
+                for l in range(L):
+                    frag = (l % self.K) if strided else min(l * self.K // L, self.K - 1)
+                    rows[frag].append(l)
+                per_row = nbytes // L
+                for f in range(self.K):
+                    frag_bytes[f] += per_row * len(rows[f])
+                plans.append(_LeafPlan(p, True, tuple(tuple(r) for r in rows), None,
+                                       per_row, nbytes))
+            else:
+                pending_flat.append((p, nbytes))
+
+        # pass 2: whole leaves, biggest first, to the lightest fragment
+        for p, nbytes in sorted(pending_flat, key=lambda t: -t[1]):
+            owner = int(np.argmin(frag_bytes))
+            frag_bytes[owner] += nbytes
+            plans.append(_LeafPlan(p, False, None, owner, nbytes, nbytes))
+
+        self._plans: Dict[str, _LeafPlan] = {pl.path: pl for pl in plans}
+        self._frag_bytes = frag_bytes
+
+    # -- interface ----------------------------------------------------------
+
+    def fragment_bytes(self, p: int) -> int:
+        return int(self._frag_bytes[p])
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self._frag_bytes.sum())
+
+    def _plan(self, path) -> _LeafPlan:
+        return self._plans[_path_str(path)]
+
+    def extract(self, tree, p: int, *, worker_axis: bool = False):
+        """Return the fragment-p sub-pytree (same structure; absent leaves -> None,
+        layered leaves -> only fragment rows). worker_axis: leaves have a leading
+        worker dim M before the layer axis."""
+        off = 1 if worker_axis else 0
+
+        def fn(path, leaf):
+            plan = self._plan(path)
+            if plan.is_layered:
+                rows = plan.rows[p]
+                if not rows:
+                    return None
+                return jnp.take(leaf, jnp.asarray(rows), axis=off)
+            return leaf if plan.owner == p else None
+
+        return jax.tree_util.tree_map_with_path(fn, tree)
+
+    def insert(self, tree, p: int, frag, *, worker_axis: bool = False):
+        """Write fragment-p values back into the full tree."""
+        off = 1 if worker_axis else 0
+
+        def fn(path, leaf, fleaf):
+            plan = self._plan(path)
+            if plan.is_layered:
+                rows = plan.rows[p]
+                if not rows or fleaf is None:
+                    return leaf
+                idx = jnp.asarray(rows)
+                if worker_axis:
+                    return leaf.at[:, idx].set(fleaf)
+                return leaf.at[idx].set(fleaf)
+            if plan.owner == p and fleaf is None:
+                raise ValueError(f"missing fragment leaf for {_path_str(path)}")
+            return fleaf if plan.owner == p else leaf
+
+        return jax.tree_util.tree_map_with_path(fn, tree, frag,
+                                                is_leaf=lambda x: x is None)
+
+    def extract_meta(self, tree, p: int):
+        """Structure-only extraction (no slicing): keeps the leaf object itself for
+        leaves present in fragment p, None otherwise. Used to derive sharding /
+        SDS pytrees for fragment arguments (a row-take preserves rank, so the
+        original sharding applies to the sliced leaf)."""
+
+        def fn(path, leaf):
+            plan = self._plan(path)
+            if plan.is_layered:
+                return leaf if plan.rows[p] else None
+            return leaf if plan.owner == p else None
+
+        return jax.tree_util.tree_map_with_path(fn, tree)
+
+    def owners(self) -> Dict[str, Any]:
+        """Debug/properties: path -> (fragment owner | per-fragment rows)."""
+        return {p: (pl.rows if pl.is_layered else pl.owner)
+                for p, pl in self._plans.items()}
+
+
+def make_fragmenter(cfg_model, params_shape, n_fragments: int, *,
+                    strided: bool = True) -> Fragmenter:
+    counts = [cfg_model.n_layers, cfg_model.n_enc_layers]
+    if cfg_model.block_pattern:
+        counts.append(cfg_model.n_layers // len(cfg_model.block_pattern))
+    return Fragmenter(params_shape, n_fragments, counts, strided=strided)

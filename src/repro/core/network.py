@@ -1,0 +1,57 @@
+"""WAN network + compute model for the cross-region simulation.
+
+Models the paper's environment: M datacenters joined by high-latency,
+bandwidth-limited links running ring all-reduce. Supplies:
+  * T_s(bytes)  — single-fragment ring all-reduce time (Eq. 9 denominator)
+  * T_c         — per-local-step compute time
+  * tau(bytes)  — overlap depth implied by T_s/T_c (or fixed, paper-style)
+and a simulated wall-clock used by the protocol engines (DiLoCo blocks on T_s;
+Streaming/CoCoDC hide it under compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    num_workers: int = 4
+    latency_s: float = 0.15          # WAN RTT-scale latency per all-reduce phase
+    bandwidth_Bps: float = 1.25e9    # 10 Gb/s inter-DC
+    step_time_s: float = 1.0         # T_c: one local training step
+
+    def allreduce_time(self, nbytes: int) -> float:
+        """Ring all-reduce: 2(M-1)/M of the payload crosses each link, plus
+        2(M-1) latency hops."""
+        m = self.num_workers
+        if m <= 1:
+            return 0.0
+        return 2 * (m - 1) * self.latency_s + (2 * (m - 1) / m) * nbytes / self.bandwidth_Bps
+
+    @property
+    def t_c(self) -> float:
+        return self.step_time_s
+
+    def t_s(self, nbytes: int) -> float:
+        return self.allreduce_time(nbytes)
+
+    def tau_steps(self, nbytes: int) -> int:
+        """Overlap depth implied by the network: steps of compute that fit inside
+        one fragment all-reduce."""
+        import math
+        return max(1, math.ceil(self.t_s(nbytes) / self.t_c))
+
+
+def paper_network(num_workers: int = 4, *, step_time_s: float = 1.0,
+                  fragment_bytes: int | None = None,
+                  tau: int = 5) -> NetworkModel:
+    """Network calibrated so that T_s = tau * T_c for the given fragment size,
+    matching the paper's tau=5, N=8 (gamma=0.4, H=100) setting."""
+    if fragment_bytes is None or num_workers <= 1:
+        return NetworkModel(num_workers=num_workers, step_time_s=step_time_s)
+    m = num_workers
+    target_ts = tau * step_time_s
+    lat = 0.1 * target_ts / (2 * (m - 1))          # 10% latency, 90% bandwidth
+    bw = (2 * (m - 1) / m) * fragment_bytes / (0.9 * target_ts)
+    return NetworkModel(num_workers=m, latency_s=lat, bandwidth_Bps=bw,
+                        step_time_s=step_time_s)

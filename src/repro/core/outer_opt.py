@@ -1,0 +1,41 @@
+"""Outer optimizer (DiLoCo family): SGD with Nesterov momentum on pseudo-gradients.
+
+The pseudo-gradient Delta = (1/M) sum_m (theta^m - theta^g_prev) points in the
+descent direction already (it is the average local progress), so the update is
+ascent along Delta:
+
+    m      <- mu * m + Delta
+    theta  <- theta + lr * (Delta + mu * m)        (Nesterov)
+
+State is kept per-fragment-leaf as a full-tree momentum pytree; fragment updates
+touch only the fragment's rows (the Fragmenter hands us sub-trees).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params_like):
+    return jax.tree.map(
+        lambda a: None if a is None else jnp.zeros_like(a), params_like,
+        is_leaf=lambda x: x is None)
+
+
+def nesterov_update(theta, momentum, delta, *, lr: float, mu: float):
+    """Apply one outer step on a (fragment) pytree. None leaves pass through."""
+
+    def upd(t, m, d):
+        if t is None:
+            return None, None
+        m_new = mu * m + d
+        t_new = t + lr * (d + mu * m_new)
+        return t_new, m_new
+
+    flat_t, treedef = jax.tree.flatten(theta, is_leaf=lambda x: x is None)
+    flat_m = treedef.flatten_up_to(momentum)
+    flat_d = treedef.flatten_up_to(delta)
+    out = [upd(t, m, d) for t, m, d in zip(flat_t, flat_m, flat_d)]
+    theta_new = treedef.unflatten([o[0] for o in out])
+    mom_new = treedef.unflatten([o[1] for o in out])
+    return theta_new, mom_new

@@ -1,0 +1,268 @@
+"""Event-driven cross-region protocol engines: DiLoCo, Streaming DiLoCo, CoCoDC.
+
+The engine owns the *cross-region* coordination state: the global model theta^g,
+the outer (Nesterov) momentum, the set of in-flight fragment all-reduces, the
+adaptive-transmission scheduler, and the simulated WAN wall-clock. Worker-local
+training (inner AdamW steps) happens outside, on a worker-stacked params pytree
+(leading axis M, sharded over the `pod` mesh axis in the multi-pod deployment).
+
+Timeline semantics (faithful to the paper):
+  * every local step costs T_c;
+  * DiLoCo: at t % H == H-1, a BLOCKING full-model all-reduce (wall += T_s_full),
+    outer update, and all workers restart from theta^g;
+  * Streaming DiLoCo: fragment p's all-reduce is initiated on a fixed round-robin
+    schedule (one fragment every H/K steps) and completes tau steps later; on
+    completion: outer update of the fragment, then Eq. 3 blending;
+  * CoCoDC: initiations every h = H/N steps (Eq. 9/10), fragment chosen by
+    Algorithm 2; local fragment snapshot taken at initiation; on completion:
+    outer update, then Algorithm 1 delay compensation; R_p updated (Eq. 11).
+
+The cross-pod mean over the worker axis is the ONLY cross-region collective; under
+the multi-pod mesh it lowers to an all-reduce over the `pod` axis (verified in the
+dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CoCoDCConfig
+from repro.core import adaptive as adaptive_lib
+from repro.core import delay_comp as dc_lib
+from repro.core import outer_opt
+from repro.core.fragments import Fragmenter
+from repro.core.network import NetworkModel
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: None if x is None else x - y, a, b,
+                        is_leaf=lambda x: x is None)
+
+
+def _tree_worker_mean(a):
+    return jax.tree.map(lambda x: None if x is None else jnp.mean(x, axis=0), a,
+                        is_leaf=lambda x: x is None)
+
+
+def _tree_broadcast_workers(a, m):
+    return jax.tree.map(
+        lambda x: None if x is None else jnp.broadcast_to(x[None], (m,) + x.shape),
+        a, is_leaf=lambda x: x is None)
+
+
+def _tree_norm(a) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(a) if l is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+@dataclasses.dataclass
+class InFlight:
+    frag: int
+    t_init: int
+    deliver_at: int
+    delta_avg: Any            # globally-averaged pseudo-gradient (the all-reduce)
+    snapshot: Any             # worker-stacked local fragment at t_init (CoCoDC)
+    delta_norm: jax.Array
+
+
+class ProtocolEngine:
+    """One engine instance per training run. Methods mutate engine state and
+    return the (possibly updated) worker-stacked params."""
+
+    def __init__(self, method: str, ccfg: CoCoDCConfig, fragmenter: Fragmenter,
+                 network: NetworkModel, params_stack, *, dc_impl: str = "ref"):
+        assert method in ("diloco", "streaming", "cocodc", "local")
+        self.method = method
+        self.cfg = ccfg
+        self.frag = fragmenter
+        self.net = network
+        self.dc_impl = dc_impl
+        self.M = ccfg.num_workers
+        self.K = ccfg.num_fragments
+        self.H = ccfg.local_steps
+        self.tau = ccfg.overlap_depth
+        # global model starts at the (identical) worker init
+        self.theta_g = jax.tree.map(lambda a: a[0], params_stack)
+        self.momentum = jax.tree.map(jnp.zeros_like, self.theta_g)
+        self.in_flight: List[InFlight] = []
+        self.adaptive = adaptive_lib.AdaptiveState(K=self.K, H=self.H)
+        # Eq. 9/10 scheduling interval
+        mean_frag_bytes = self.frag.total_bytes / self.K
+        t_s = network.t_s(int(mean_frag_bytes))
+        self.N = adaptive_lib.target_syncs(self.K, self.H, network.t_c, t_s,
+                                           ccfg.net_utilization)
+        self.h_cocodc = adaptive_lib.sync_interval(self.H, self.N)
+        self.h_stream = max(1, self.H // self.K)
+        # partial participation (straggler tolerance, beyond-paper): offline
+        # workers neither contribute to nor receive fragment syncs
+        self.worker_available = [True] * self.M
+        # stats
+        self.wall_clock = 0.0
+        self.comm_seconds = 0.0
+        self.bytes_sent = 0
+        self.n_syncs = 0
+        self._channel_free_at = 0.0
+
+    # ------------------------------------------------------------------ utils
+
+    def set_worker_availability(self, worker: int, available: bool):
+        """Mark a datacenter online/offline (WAN partition / maintenance).
+        Offline workers are excluded from subsequent syncs until restored."""
+        self.worker_available[worker] = available
+
+    def _sparsify(self, d):
+        """Top-k magnitude sparsification per leaf (sync_topk_frac < 1)."""
+        frac = self.cfg.sync_topk_frac
+        if frac >= 1.0 or d.size == 0:
+            return d
+        k = max(1, int(d.size * frac))
+        flat = jnp.abs(d.reshape(-1))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(d) >= thresh, d, jnp.zeros((), d.dtype))
+
+    def _allreduce(self, frag_stack, theta_g_frag):
+        """The cross-region collective: mean over the AVAILABLE workers of the
+        pseudo-gradients. Under the multi-pod mesh this is the pod all-reduce.
+        Payload crosses the WAN in cfg.sync_dtype (bf16 compression is a
+        beyond-paper option), optionally top-k-sparsified; accumulation
+        returns to f32."""
+        sync_dt = jnp.dtype(self.cfg.sync_dtype)
+        mask = jnp.asarray(self.worker_available, jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+
+        def avg(x, g):
+            if x is None:
+                return None
+            d = (x - g[None]).astype(sync_dt)
+            if self.cfg.sync_topk_frac < 1.0:
+                d = jax.vmap(self._sparsify)(d)
+            w = mask.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+            return (jnp.sum(d * w, axis=0) / denom.astype(d.dtype)
+                    ).astype(jnp.float32)
+
+        return jax.tree.map(avg, frag_stack, theta_g_frag,
+                            is_leaf=lambda x: x is None)
+
+    def _account_transfer(self, nbytes: int):
+        if jnp.dtype(self.cfg.sync_dtype).itemsize < 4:
+            nbytes = nbytes * jnp.dtype(self.cfg.sync_dtype).itemsize // 4
+        if self.cfg.sync_topk_frac < 1.0:
+            # sparse wire format: values + indices
+            nbytes = int(nbytes * min(1.0, 2 * self.cfg.sync_topk_frac))
+        t_s = self.net.t_s(nbytes)
+        start = max(self.wall_clock, self._channel_free_at)
+        self._channel_free_at = start + t_s
+        self.comm_seconds += t_s
+        self.bytes_sent += nbytes
+        self.n_syncs += 1
+
+    # ------------------------------------------------------------ initiation
+
+    def _initiate(self, t: int, params_stack, p: int):
+        theta_g_frag = self.frag.extract(self.theta_g, p)
+        frag_stack = self.frag.extract(params_stack, p, worker_axis=True)
+        delta_avg = self._allreduce(frag_stack, theta_g_frag)
+        self.in_flight.append(InFlight(
+            frag=p, t_init=t, deliver_at=t + self.tau, delta_avg=delta_avg,
+            snapshot=frag_stack if self.method == "cocodc" else None,
+            delta_norm=_tree_norm(delta_avg)))
+        self._account_transfer(self.frag.fragment_bytes(p))
+
+    # -------------------------------------------------------------- delivery
+
+    def _deliver(self, t: int, params_stack, ev: InFlight):
+        p = ev.frag
+        theta_g_frag = self.frag.extract(self.theta_g, p)
+        mom_frag = self.frag.extract(self.momentum, p)
+        new_g, new_mom = outer_opt.nesterov_update(
+            theta_g_frag, mom_frag, ev.delta_avg,
+            lr=self.cfg.outer_lr, mu=self.cfg.outer_momentum)
+        self.theta_g = self.frag.insert(self.theta_g, p, new_g)
+        self.momentum = self.frag.insert(self.momentum, p, new_mom)
+
+        local_now = self.frag.extract(params_stack, p, worker_axis=True)
+        avail = jnp.asarray(self.worker_available, bool)
+        if self.method == "streaming":
+            new_local = dc_lib.blend(
+                local_now,
+                jax.tree.map(lambda g: None if g is None else g[None], new_g,
+                             is_leaf=lambda x: x is None),
+                alpha=self.cfg.mixing_alpha)
+        else:  # cocodc — Algorithm 1
+            tau_actual = max(1, t - ev.t_init)
+            new_local = dc_lib.compensate(
+                local_now, ev.snapshot,
+                jax.tree.map(lambda g: None if g is None else g[None], new_g,
+                             is_leaf=lambda x: x is None),
+                tau=float(tau_actual), lam=self.cfg.comp_lambda, H=float(self.H),
+                sign=self.cfg.eq4_sign, impl=self.dc_impl)
+        if not all(self.worker_available):
+            # offline workers keep their local state (they re-sync on return)
+            new_local = jax.tree.map(
+                lambda n, o: None if n is None else jnp.where(
+                    avail.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new_local, local_now, is_leaf=lambda x: x is None)
+        params_stack = self.frag.insert(params_stack, p, new_local,
+                                        worker_axis=True)
+        # Eq. 11 metric update (identical on all workers: uses the shared delta)
+        adaptive_lib.update_rate(self.adaptive, p, float(ev.delta_norm), t)
+        return params_stack
+
+    # ------------------------------------------------------------- main hook
+
+    def on_step_end(self, t: int, params_stack):
+        """Call after inner step t (0-based). Returns updated params_stack."""
+        self.wall_clock += self.net.t_c
+        if self.method == "local":
+            return params_stack
+
+        if self.method == "diloco":
+            if (t + 1) % self.H == 0:
+                delta_avg = self._allreduce(params_stack, self.theta_g)
+                self.theta_g, self.momentum = outer_opt.nesterov_update(
+                    self.theta_g, self.momentum, delta_avg,
+                    lr=self.cfg.outer_lr, mu=self.cfg.outer_momentum)
+                t_s = self.net.t_s(self.frag.total_bytes)
+                self.wall_clock += t_s       # BLOCKING
+                self.comm_seconds += t_s
+                self.bytes_sent += self.frag.total_bytes
+                self.n_syncs += 1
+                params_stack = _tree_broadcast_workers(self.theta_g, self.M)
+            return params_stack
+
+        # --- overlapped methods: deliveries due at this step ---------------
+        due = [ev for ev in self.in_flight if ev.deliver_at <= t]
+        for ev in sorted(due, key=lambda e: e.deliver_at):
+            params_stack = self._deliver(t, params_stack, ev)
+            self.in_flight.remove(ev)
+
+        # --- initiations ----------------------------------------------------
+        if self.method == "streaming":
+            if t % self.h_stream == 0:
+                p = (t // self.h_stream) % self.K
+                if all(ev.frag != p for ev in self.in_flight):
+                    self._initiate(t, params_stack, p)
+        else:  # cocodc
+            if t % self.h_cocodc == 0:
+                busy = {ev.frag for ev in self.in_flight}
+                if len(busy) < self.K:
+                    p = adaptive_lib.select_fragment(self.adaptive, t, busy)
+                    self._initiate(t, params_stack, p)
+        return params_stack
+
+    # ---------------------------------------------------------------- stats
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "wall_clock_s": self.wall_clock,
+            "comm_seconds": self.comm_seconds,
+            "bytes_sent": float(self.bytes_sent),
+            "n_syncs": float(self.n_syncs),
+            "overlap_ratio": (0.0 if self.wall_clock == 0 else
+                              min(1.0, self.comm_seconds / self.wall_clock)),
+            "target_syncs_N": float(self.N),
+        }

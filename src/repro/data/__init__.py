@@ -1,0 +1,1 @@
+from repro.data.pipeline import MarkovCorpus, make_worker_streams  # noqa: F401

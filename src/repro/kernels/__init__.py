@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (handles padding/reshapes, interpret fallback)
+  ref.py    — pure-jnp oracle used by tests and as the CPU execution path
+
+Kernels:
+  delay_comp      — fused CoCoDC Algorithm-1 update (the paper's per-sync hot-spot)
+  flash_attention — blockwise causal/sliding-window GQA attention
+  rglru_scan      — chunked RG-LRU linear recurrence (Griffin/RecurrentGemma)
+  rwkv6_scan      — chunked RWKV-6 WKV recurrence (matrix-valued head state)
+  rms_norm        — fused RMSNorm (one HBM pass)
+  flash_decode    — one-token GQA attention over ring-buffer KV caches (serving)
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.delay_comp.ops import delay_comp  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public wrapper for the fused delay-compensation kernel.
+
+Works on arbitrary pytrees: leaves are raveled, concatenated conceptually (in fact
+processed per-leaf), padded to the (rows, 1024) tile and dispatched to the Pallas
+kernel. On CPU (this container) the kernel runs in interpret mode; callers who want
+the pure-XLA path use the ref oracle via ``impl="ref"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delay_comp.delay_comp import LANES, delay_comp_2d
+from repro.kernels.delay_comp.ref import delay_comp_ref
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def delay_comp_array(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
+                     impl: str = "auto"):
+    """Single-array fused update. tau/lam/H/sign may be python or jnp scalars."""
+    if impl == "ref" or (impl == "auto" and _is_cpu() and theta_tl.size > 1 << 20):
+        # interpret mode is pure-python-per-tile; keep big CPU arrays on the oracle
+        return delay_comp_ref(theta_tl, theta_tp, theta_g, tau=tau, lam=lam, H=H,
+                              sign=sign)
+    interpret = _is_cpu()
+    shape, dtype = theta_tl.shape, theta_tl.dtype
+    n = theta_tl.size
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+
+    def prep(a):
+        flat = a.reshape(-1)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat.reshape(rows, LANES)
+
+    scalars = jnp.asarray(
+        [jnp.float32(tau), jnp.float32(lam), jnp.float32(H), jnp.float32(sign)],
+        jnp.float32)
+    out = delay_comp_2d(prep(theta_tl), prep(theta_tp), prep(theta_g), scalars,
+                        interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def delay_comp(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
+               impl: str = "auto"):
+    """Pytree-level fused delay compensation (CoCoDC Algorithm 1)."""
+    return jax.tree.map(
+        lambda tl, tp, tg: delay_comp_array(tl, tp, tg, tau=tau, lam=lam, H=H,
+                                            sign=sign, impl=impl),
+        theta_tl, theta_tp, theta_g)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused CoCoDC delay-compensation update (Algorithm 1).
+
+    g      = sign * (theta_tl - theta_tp) / tau                 (Eq. 4; sign note in
+                                                                 DESIGN.md §5)
+    g_corr = g + lam * g*g*(theta_g - theta_tp) / H             (Eq. 7, Hadamard)
+    out    = theta_g + g_corr * tau                             (Eq. 8)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delay_comp_ref(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0):
+    tl = theta_tl.astype(jnp.float32)
+    tp = theta_tp.astype(jnp.float32)
+    tg = theta_g.astype(jnp.float32)
+    g = sign * (tl - tp) / tau
+    g_corr = g + lam * g * g * (tg - tp) / H
+    return (tg + g_corr * tau).astype(theta_tl.dtype)

@@ -1,0 +1,39 @@
+"""Public wrapper: (B, S, H, hd) layout in/out, padding to block multiples,
+interpret-mode on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (DEFAULT_BK, DEFAULT_BQ,
+                                                           flash_attention_bhsd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=DEFAULT_BQ,
+                    bk=DEFAULT_BK):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) — the models' layout.
+    Pads S to block multiples, transposes to (B, H, S, hd) for the kernel."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    interpret = jax.default_backend() == "cpu"
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Sk, 8))
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys sit at positions >= Sk; causal masking from real queries
+        # (pos < Sq <= Sk) removes them as long as causal=True. For non-causal use
+        # with padding, mask via window instead — asserted here.
+        assert causal, "non-causal flash path requires Sk % bk == 0"
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    if pad_q:
+        o = o[:, :, :Sq]
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,31 @@
+"""Public wrapper: models' (B, C, KV, hd) cache layout -> kernel layout, padding,
+interpret mode on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.flash_decode import BLOCK_C, flash_decode_bkv
+
+
+def flash_decode(q, k_cache, v_cache, kv_positions, q_position, *, window=None,
+                 bc=BLOCK_C):
+    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) int32 (-1 =
+    empty); q_position: () int32. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    C, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    interpret = jax.default_backend() == "cpu"
+    bc = min(bc, max(C, 8))
+    pad = (-C) % bc
+    kt = jnp.moveaxis(k_cache, 2, 1)                    # (B, KV, C, hd)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    pos = kv_positions
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos = jnp.pad(pos, (0, pad), constant_values=-1)  # masked out
+    qg = q.reshape(B, KV, G, hd)
+    o = flash_decode_bkv(qg, kt, vt, pos, q_position, window=window, bc=bc,
+                         interpret=interpret)
+    return o.reshape(B, H, hd)

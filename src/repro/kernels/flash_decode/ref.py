@@ -1,0 +1,21 @@
+"""Oracle: one-token GQA attention over a (ring-buffer) KV cache, via the shared
+reference attention."""
+from __future__ import annotations
+
+from repro.models.layers import gqa_attention
+
+
+def flash_decode_ref(q, k_cache, v_cache, kv_positions, q_position, *,
+                     window=None):
+    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) int32 (-1 =
+    empty slot); q_position: scalar int32. Returns (B, H, hd)."""
+    import jax.numpy as jnp
+    B = q.shape[0]
+    C = k_cache.shape[1]
+    q4 = q[:, None]                                     # (B, 1, H, hd)
+    qpos = jnp.broadcast_to(q_position[None, None], (B, 1)).astype(jnp.int32)
+    kvpos = jnp.broadcast_to(kv_positions[None], (B, C))
+    out = gqa_attention(q4, k_cache, v_cache, causal=True, window=window,
+                        q_positions=qpos, kv_positions=kvpos,
+                        kv_mask=kvpos >= 0)
+    return out[:, 0]

@@ -1,0 +1,1 @@
+from repro.kernels.rglru_scan.ops import lru_scan  # noqa: F401

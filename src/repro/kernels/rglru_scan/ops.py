@@ -1,0 +1,27 @@
+"""Public wrapper for the chunked RG-LRU scan kernel (padding + interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.rglru_scan import BLOCK_D, BLOCK_T, lru_scan_btd
+
+
+def lru_scan(a, b, h0=None, *, bt=BLOCK_T, bd=BLOCK_D):
+    """a, b: (B, T, D) — h_t = a_t h_{t-1} + b_t. Returns h: (B, T, D) f32."""
+    B, T, D = a.shape
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    h0 = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    interpret = jax.default_backend() == "cpu"
+    bt = min(bt, T)
+    bd = min(bd, D)
+    pad_t = (-T) % bt
+    pad_d = (-D) % bd
+    if pad_t or pad_d:
+        # a=1, b=0 padding keeps the carried state unchanged on pad rows
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_d)))
+    h = lru_scan_btd(a, b, h0, bt=bt, bd=bd, interpret=interpret)
+    return h[:, :T, :D]

@@ -1,0 +1,1 @@
+from repro.kernels.rms_norm.ops import rms_norm  # noqa: F401

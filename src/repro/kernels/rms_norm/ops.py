@@ -1,0 +1,24 @@
+"""Public wrapper: arbitrary leading dims, row padding, CPU interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rms_norm.rms_norm import BLOCK_ROWS, rms_norm_2d
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    """x: (..., D); weight: (D,). Fused Pallas RMSNorm."""
+    interpret = jax.default_backend() == "cpu"
+    shape = x.shape
+    D = shape[-1]
+    x2 = x.reshape(-1, D)
+    R = x2.shape[0]
+    block = min(BLOCK_ROWS, R)
+    pad = (-R) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rms_norm_2d(x2, weight, eps=eps, interpret=interpret)
+    if pad:
+        out = out[:R]
+    return out.reshape(shape)

@@ -1,0 +1,2 @@
+"""Oracle: the models' own RMSNorm (models/layers.py)."""
+from repro.models.layers import rms_norm as rms_norm_ref  # noqa: F401

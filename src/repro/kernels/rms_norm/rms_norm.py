@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: fused RMSNorm.
+
+Unfused, the norm costs 3 HBM passes (square-mean reduce, rsqrt-scale, weight
+mul); fused it is one read + one write per row block. Rows (tokens) tile the
+grid; the feature dim stays resident in VMEM (d_model <= 16384 f32 = 64 KiB —
+fine). f32 statistics regardless of input dtype, matching the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLOCK_ROWS = 256
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                  # (R, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm_2d(x, w, *, eps=1e-5, interpret=False):
+    """x: (R, D); w: (D,). R % BLOCK_ROWS need not hold (grid ceil-div)."""
+    R, D = x.shape
+    block = min(BLOCK_ROWS, R)
+    grid = (pl.cdiv(R, block),)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, D), lambda i: (i, 0)),
+                  pl.BlockSpec((1, D), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+        name="fused_rms_norm",
+    )(x, w[None])

@@ -1,0 +1,34 @@
+"""Public wrapper: (B, T, H, hd) layout, fold (B, H) -> grid axis, pad T."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import BLOCK_T, wkv_scan_bht
+
+
+def wkv_scan(r, k, v, w, u, s0=None, *, bt=BLOCK_T):
+    """r,k,v,w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) f32 or None.
+    Returns (o: (B, T, H, hd), sT: (B, H, hd, hd) f32)."""
+    B, T, H, hd = r.shape
+    interpret = jax.default_backend() == "cpu"
+    bt = min(bt, T)
+    pad_t = (-T) % bt
+
+    def fold(a):
+        a = jnp.moveaxis(a, 2, 1).reshape(B * H, T, hd)
+        if pad_t:
+            a = jnp.pad(a, ((0, 0), (0, pad_t), (0, 0)))
+        return a
+
+    rf, kf, vf = fold(r), fold(k), fold(v)
+    wf = fold(w)
+    if pad_t:
+        # w=1 on pad rows keeps the state frozen; k=v=0 adds nothing
+        wf = wf.at[:, T:].set(1.0)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    s0f = (jnp.zeros((B * H, hd, hd), jnp.float32) if s0 is None
+           else s0.reshape(B * H, hd, hd).astype(jnp.float32))
+    o, sT = wkv_scan_bht(rf, kf, vf, wf, uf, s0f, bt=bt, interpret=interpret)
+    o = jnp.moveaxis(o[:, :T].reshape(B, H, T, hd), 1, 2)
+    return o, sT.reshape(B, H, hd, hd)

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence — delegates to the model's own
+reference scan so kernel and model are validated against the same semantics."""
+from __future__ import annotations
+
+from repro.models.rwkv6 import wkv_scan_ref  # noqa: F401

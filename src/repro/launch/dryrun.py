@@ -1,0 +1,382 @@
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) combination
+lowers and compiles on the production meshes, and harvest roofline inputs.
+
+MUST be run as a fresh process (device count is locked at first jax init):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, CoCoDCConfig, get_config
+from repro.core.fragments import make_fragmenter
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# archs where f32 AdamW moments cannot fit a v5e pod: use bf16 moments (DESIGN.md)
+BF16_MOMENT_ARCHS = {"llama3-405b"}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum PER-DEVICE operand bytes of every collective op in post-SPMD HLO.
+    Returns (total_bytes, per_op_kind dict, op_count)."""
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                   "pred": 1, "c64": 8}
+    per_kind = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    ty_re = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    def nbytes(ty, dims):
+        n = dtype_bytes.get(ty, 4)
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        return n
+
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = .+? ([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((k for k in COLLECTIVE_OPS
+                     if op == k or op.startswith(k + "-")), None)
+        if kind is None or op.endswith("-done"):
+            continue
+        # operand types appear inside the call parens; fall back to output type
+        paren = stripped[stripped.index(op + "("):]
+        operand_tys = ty_re.findall(paren)
+        if operand_tys:
+            b = sum(nbytes(t, d) for t, d in operand_tys)
+        else:
+            out_ty = ty_re.search(stripped.split("=", 1)[1])
+            b = nbytes(*out_ty.groups()) if out_ty else 0
+        per_kind[kind] += b
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return total, per_kind, counts
+
+
+def pod_collective_present(hlo_text: str, mesh, *, ops=None) -> bool:
+    """Pod-axis collectives have replica groups joining device ids that differ by
+    the pod stride (=256 on the (2,16,16) mesh, pod-major). `ops` restricts the
+    scan to specific op names (e.g. reductions); None = any collective line.
+
+    Semantics note: a pod-spanning ALL-GATHER can be a benign GSPMD reshard
+    (replicate-then-repartition preserves each pod's values); a pod-spanning
+    ALL-REDUCE/REDUCE-SCATTER would MIX the pods' diverged replicas — that is the
+    invariant the dry-run asserts on train/serve steps."""
+    import numpy as np
+    stride = mesh.devices.size // mesh.devices.shape[0]
+
+    def group_spans_pods(groups) -> bool:
+        return any(max(g) - min(g) >= stride for g in groups if len(g) >= 2)
+
+    def line_matches(line: str) -> bool:
+        if "replica_groups" not in line:
+            return False
+        if ops is None:
+            return True
+        if not any(f" {op}" in line or f"%{op}" in line or f"= {op}(" in line
+                   or op + "(" in line for op in ops):
+            return False
+        # GSPMD lowers gather/scatter reshard fallbacks ("involuntary full
+        # rematerialization") as masked all-reduce SUMS of disjoint per-pod
+        # contributions — data movement, not semantic mixing. Exclude them.
+        m = re.search(r'op_name="([^"]*)"', line)
+        if m and any(k in m.group(1) for k in ("gather", "scatter",
+                                               "dynamic")):
+            return False
+        return True
+
+    for line in hlo_text.splitlines():
+        if not line_matches(line):
+            continue
+        # explicit list format: replica_groups={{0,256},{1,257},...}
+        m = re.search(r"replica_groups=\{\{(.*?)\}\}", line)
+        if m:
+            groups = [[int(x) for x in re.findall(r"\d+", grp)]
+                      for grp in m.group(1).split("},{")]
+            if group_spans_pods(groups):
+                return True
+        # iota format: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...)
+        m = re.search(
+            r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+            line)
+        if m:
+            G, S = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")]
+            ids = np.arange(int(np.prod(dims)))
+            if m.group(4):
+                perm = [int(x) for x in m.group(4).split(",")]
+                ids = ids.reshape(dims).transpose(perm).reshape(-1)
+            if group_spans_pods(ids.reshape(G, S).tolist()):
+                return True
+    return False
+
+
+def probe_config(cfg, depth_units: int):
+    """Reduced-DEPTH (full-width) variant for roofline probes. depth_units is in
+    layers (dense/moe/ssm), pattern groups (hybrid), or enc+dec layer pairs
+    (audio). Probes are lowered UNROLLED so XLA cost analysis sees every layer
+    (scan bodies are otherwise counted once — see EXPERIMENTS.md §Roofline)."""
+    import dataclasses
+    if cfg.block_pattern:
+        n = depth_units * len(cfg.block_pattern)
+        return dataclasses.replace(cfg, n_layers=n)
+    if cfg.n_enc_layers:
+        return dataclasses.replace(cfg, n_layers=depth_units,
+                                   n_enc_layers=depth_units)
+    return dataclasses.replace(cfg, n_layers=depth_units)
+
+
+def depth_units_of(cfg) -> int:
+    """Total depth units in the full config (matching probe_config scaling)."""
+    if cfg.block_pattern:
+        return cfg.n_layers // len(cfg.block_pattern)
+    return cfg.n_layers
+
+
+MOE_MEGATRON_OVERRIDES = [
+    # §Perf iteration 3: Megatron row/column MoE sharding — contract over the
+    # UNSHARDED d_model, shard d_ff; one all-reduce after w_down instead of
+    # partial-sum ARs after w_gate AND w_up.
+    (r".*moe/w_(gate|up)$", [__import__("jax").sharding.PartitionSpec(
+        None, "model", None, "data")]),
+    (r".*moe/w_down$", [__import__("jax").sharding.PartitionSpec(
+        None, "model", "data", None)]),
+]
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
+                include_sync: bool = True, verbose: bool = True,
+                probe_depth: int | None = None, profile: str = "2d",
+                moe_megatron: bool = False, sync_dtype: str = "float32",
+                seq_parallel: bool = False):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    unroll = probe_depth is not None
+    if unroll:
+        cfg = probe_config(cfg, probe_depth)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pods = mesh.devices.shape[0] if multi_pod else 0
+    n_chips = mesh.devices.size
+    moment_dtype = jnp.bfloat16 if cfg.name in BF16_MOMENT_ARCHS else jnp.float32
+
+    result = {"arch": get_config(arch).name, "shape": shape_name,
+              "mesh": "multi_pod" if multi_pod else "single_pod",
+              "chips": n_chips, "status": "ok"}
+    if unroll:
+        result["probe_depth"] = probe_depth
+        result["probe_layers"] = cfg.n_layers
+
+    if shape.kind == "decode" and shape_name == "long_500k" and not cfg.supports_long_decode:
+        result["status"] = "skipped"
+        result["reason"] = "full-attention enc-dec: no sub-quadratic decode (DESIGN.md)"
+        return result
+
+    overrides = MOE_MEGATRON_OVERRIDES if moe_megatron else None
+    if profile != "2d":
+        result["profile"] = profile
+    if moe_megatron:
+        result["moe_megatron"] = True
+    if seq_parallel:
+        result["seq_parallel"] = True
+    sds = steps_lib.input_specs(cfg, shape, pods=pods, moment_dtype=moment_dtype)
+    shards = steps_lib.shardings_for(cfg, shape, mesh, pods=pods,
+                                     moment_dtype=moment_dtype, profile=profile,
+                                     overrides=overrides)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "decode":
+            window = cfg.long_decode_window if shape_name == "long_500k" else None
+            fn = (steps_lib.make_pod_serve_step(cfg, window=window, unroll=unroll)
+                  if multi_pod
+                  else steps_lib.make_serve_step(cfg, window=window,
+                                                 unroll=unroll))
+            jf = jax.jit(fn, in_shardings=(shards["params"], shards["cache"],
+                                           shards["tokens"]))
+            lowered = jf.lower(sds["params"], sds["cache"], sds["tokens"])
+        else:
+            remat = shape.kind == "train"
+            train = shape.kind == "train"
+            remat = remat and not unroll   # probes measure the un-remat program
+            if train:
+                fn = (steps_lib.make_pod_train_step(cfg, remat=remat,
+                                                    unroll=unroll,
+                                                    seq_parallel=seq_parallel)
+                      if multi_pod
+                      else steps_lib.make_train_step(cfg, remat=remat,
+                                                     unroll=unroll,
+                                                     seq_parallel=seq_parallel))
+                jf = jax.jit(fn, in_shardings=(shards["params"],
+                                               shards["opt_state"],
+                                               shards["batch"], shards["lr"]))
+                lowered = jf.lower(sds["params"], sds["opt_state"], sds["batch"],
+                                   sds["lr"])
+            else:  # prefill: forward only (inference)
+                def prefill_fn(params, batch):
+                    h, aux = api.forward(cfg, params, batch, train=False,
+                                         remat=False, unroll=unroll)
+                    return h
+
+                if multi_pod:
+                    prefill_run = jax.vmap(prefill_fn, in_axes=(0, 0))
+                else:
+                    prefill_run = prefill_fn
+                jf = jax.jit(prefill_run, in_shardings=(shards["params"],
+                                                        shards["batch"]))
+                batch_sds = {k: v for k, v in sds["batch"].items()
+                             if k != "labels"}
+                batch_shards = {k: v for k, v in shards["batch"].items()
+                                if k != "labels"}
+                jf = jax.jit(prefill_run, in_shardings=(shards["params"],
+                                                        batch_shards))
+                lowered = jf.lower(sds["params"], batch_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    cbytes, per_kind, counts = collective_bytes(hlo)
+    result.update({
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": float(cbytes),
+        "collective_breakdown": {k: float(v) for k, v in per_kind.items() if v},
+        "collective_counts": {k: v for k, v in counts.items() if v},
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+    })
+    if multi_pod:
+        result["pod_reduction_in_step"] = pod_collective_present(
+            hlo, mesh, ops=("all-reduce", "reduce-scatter"))
+        result["pod_reshard_in_step"] = pod_collective_present(hlo, mesh)
+
+    # multi-pod: also lower the CoCoDC fragment sync step (the cross-region
+    # collective) and verify the pod all-reduce is present there
+    if multi_pod and include_sync and shape.kind == "train" and not unroll:
+        ccfg = CoCoDCConfig(num_workers=pods, sync_dtype=sync_dtype)
+        params_sds = steps_lib.abstract_params(cfg)
+        frag = make_fragmenter(cfg, params_sds, ccfg.num_fragments)
+        sync = steps_lib.make_sync_step(cfg, ccfg, frag, 0)
+        from repro.launch import sharding as shd
+        pspec = shd.param_specs(params_sds, mesh)
+        pstack = shd.named(mesh, shd.stack_spec(pspec))
+        psingle = shd.named(mesh, pspec)
+        stack_sds = steps_lib.stack_sds(params_sds, pods)
+        snap_sds = jax.eval_shape(
+            lambda t: frag.extract(t, 0, worker_axis=True), stack_sds)
+        snap_shards = frag.extract_meta(pstack, 0)
+        with mesh:
+            jf = jax.jit(sync, in_shardings=(pstack, snap_shards, psingle,
+                                             psingle))
+            lowered_sync = jf.lower(stack_sds, snap_sds, params_sds, params_sds)
+            compiled_sync = lowered_sync.compile()
+        sync_hlo = compiled_sync.as_text()
+        sbytes, skind, scount = collective_bytes(sync_hlo)
+        result["sync_collective_bytes_per_device"] = float(sbytes)
+        result["sync_pod_collective"] = pod_collective_present(
+            sync_hlo, mesh, ops=("all-reduce", "reduce-scatter"))
+        result["sync_collective_counts"] = {k: v for k, v in scount.items() if v}
+
+    if verbose:
+        print(json.dumps(result), flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    ap.add_argument("--probe", action="store_true",
+                    help="also lower depth-1/2 unrolled probes (roofline FLOPs)")
+    ap.add_argument("--profile", default="2d", choices=["2d", "dp"],
+                    help="intra-pod sharding profile (perf iterations)")
+    ap.add_argument("--moe-megatron", action="store_true",
+                    help="Megatron row/column MoE expert sharding (perf iter)")
+    ap.add_argument("--sync-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="WAN pseudo-gradient payload dtype (perf iter)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel residual sharding (perf iter)")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = [a for a in ARCH_IDS if a != "paper_150m"] if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                pairs.append((arch, shape, mp))
+
+    jobs = []
+    for arch, shape, mp in pairs:
+        jobs.append((arch, shape, mp, None))
+        if args.probe and not mp:
+            jobs.append((arch, shape, mp, 1))
+            jobs.append((arch, shape, mp, 2))
+    results = []
+    for arch, shape, mp, probe in jobs:
+        try:
+            r = dryrun_pair(arch, shape, multi_pod=mp, probe_depth=probe,
+                            profile=args.profile,
+                            moe_megatron=args.moe_megatron,
+                            sync_dtype=args.sync_dtype,
+                            seq_parallel=args.seq_parallel)
+        except Exception as e:  # noqa: BLE001 — report, don't die mid-sweep
+            r = {"arch": arch, "shape": shape,
+                 "mesh": "multi_pod" if mp else "single_pod",
+                 "status": "error", "error": f"{type(e).__name__}: {e}",
+                 "trace": traceback.format_exc()[-2000:]}
+            print(json.dumps({k: r[k] for k in ("arch", "shape", "mesh", "status",
+                                                "error")}), flush=True)
+        results.append(r)
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{archs[0] if len(archs)==1 else 'all'}"
+        path = os.path.join(args.out, f"dryrun_{tag}_{int(time.time())}.jsonl")
+        with open(path, "w") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+        print(f"wrote {path}", file=sys.stderr)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skipped")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"# dryrun: {ok} ok, {skip} skipped, {err} errors", file=sys.stderr)
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

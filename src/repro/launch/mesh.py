@@ -1,0 +1,35 @@
+"""Production meshes (TPU v5e target).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — `pod` is the cross-region
+axis: each pod is one CoCoDC worker/datacenter; fragment all-reduces are the only
+collectives that cross it.
+
+Functions, not module constants — importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """1-chip-per-axis mesh for CPU smoke tests of the sharded step functions."""
+    n = jax.device_count()
+    if multi_pod and n >= 2:
+        return jax.make_mesh((2, 1, max(1, n // 2)), ("pod", "data", "model"))
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a == "data")
+
+
+def has_pod(mesh) -> bool:
+    return "pod" in mesh.axis_names

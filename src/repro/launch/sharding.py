@@ -1,0 +1,223 @@
+"""Rule-based parameter/activation sharding.
+
+Intra-pod strategy: 2-D sharded weights — FSDP over `data` x tensor-parallel over
+`model` (MaxText-style), expert-parallel MoE over `model`, vocab-parallel
+embeddings/head. Per-leaf rules are ordered candidate PartitionSpecs; the first
+whose sharded dims divide the mesh axis sizes wins (covers the non-power-of-two
+oddballs: 40 experts, kv=10 heads, 256206 vocab).
+
+The worker/pod axis is NOT assigned here: `stack_spec` prepends P('pod') for
+worker-stacked pytrees (each pod = one diverged CoCoDC replica).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (path regex, [candidate specs]) — specs given for the array WITHOUT the worker
+# axis; trailing dims beyond the spec are replicated. "$L" marks the stacked layer
+# axis (always replicated).
+_RULES = [
+    # attention projections (stacked): (L, D, H*hd) / (L, H*hd, D)
+    (r".*(attn|self_attn|cross_attn)/w[qkv]$", [P(None, "data", "model"),
+                                                P(None, None, "model"),
+                                                P(None, "data", None)]),
+    (r".*(attn|self_attn|cross_attn)/wo$", [P(None, "model", "data"),
+                                            P(None, "model", None),
+                                            P(None, None, "data")]),
+    (r".*(attn|self_attn|cross_attn)/b[qkv]$", [P(None, "model"), P(None, None)]),
+    (r".*(attn|self_attn|cross_attn)/bo$", [P(None, None)]),
+    (r".*(q_norm|k_norm)$", [P(None, None)]),
+    # dense MLP
+    (r".*mlp/w_(gate|up)$", [P(None, "data", "model"), P(None, None, "model"),
+                             P(None, "data", None)]),
+    (r".*mlp/w_down$", [P(None, "model", "data"), P(None, "model", None),
+                        P(None, None, "data")]),
+    # MoE: experts over `model` (expert parallelism), fall back to ffn sharding
+    (r".*moe/router$", [P(None, "data", None), P(None, None, None)]),
+    (r".*moe/w_(gate|up)$", [P(None, "model", "data", None),
+                             P(None, None, "data", "model"),
+                             P(None, None, "data", None)]),
+    (r".*moe/w_down$", [P(None, "model", None, "data"),
+                        P(None, None, "model", "data"),
+                        P(None, None, None, "data")]),
+    # rwkv6 time/channel mix
+    (r".*tm/w[rkvg]$", [P(None, "data", "model"), P(None, "data", None)]),
+    (r".*tm/wo$", [P(None, "model", "data"), P(None, None, "data")]),
+    (r".*tm/lora_a$", [P(None, None, "data", None)]),
+    (r".*tm/lora_b$", [P(None, None, None, "data")]),
+    (r".*tm/w[ab]$", [P(None, "data", None)]),
+    (r".*cm/wk$", [P(None, "data", "model"), P(None, "data", None)]),
+    (r".*cm/wv$", [P(None, "model", "data"), P(None, None, "data")]),
+    (r".*cm/wr$", [P(None, "data", "model"), P(None, "data", None)]),
+    # rglru mixer
+    (r".*mixer/(w_gate_br|w_in|wa|wx)$", [P(None, "data", "model"),
+                                          P(None, "data", None)]),
+    (r".*mixer/w_out$", [P(None, "model", "data"), P(None, None, "data")]),
+    (r".*mixer/conv_w$", [P(None, None, "model"), P(None, None, None)]),
+    (r".*mixer/(conv_b|ba|bx|lam)$", [P(None, "model"), P(None, None)]),
+    # embeddings / heads. The embedding table shards on d_model only: a gather
+    # from a vocab-sharded table triggers GSPMD's "involuntary full
+    # rematerialization" (replicate-then-repartition across the whole mesh,
+    # including pod) — sharding the non-gathered dim keeps the lookup local.
+    # (d_model over `model` ONLY: adding `data` conflicts with the batch-dim
+    # sharding of the gather output and makes GSPMD replicate the batch — 7x
+    # redundant FLOPs measured; see EXPERIMENTS.md §Perf iteration 1)
+    (r"^embed$", [P(None, "model"), P(None, "data"), P(None, None)]),
+    (r"^lm_head$", [P("data", "model"), P("model", "data"), P("data", None),
+                    P(None, None)]),
+    (r"^frame_proj$", [P(None, "model"), P(None, None)]),
+    (r"^projector/w[12]$", [P("data", "model"), P(None, "model"), P(None, None)]),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _fits(spec: P, shape, axis_sizes) -> bool:
+    if len(spec) > len(shape):
+        return False
+    for dim, names in zip(shape, spec):
+        if names is None:
+            continue
+        names = names if isinstance(names, tuple) else (names,)
+        total = 1
+        for n in names:
+            total *= axis_sizes.get(n, 1)
+        if dim % total != 0:
+            return False
+    return True
+
+
+def spec_for_leaf(path: str, shape, axis_sizes) -> P:
+    for pat, candidates in _RULES:
+        if re.match(pat, path):
+            for spec in candidates:
+                if _fits(spec, shape, axis_sizes):
+                    return spec
+            return P()
+    # default: replicate small tensors; try to FSDP-shard big 2D+ ones on dim -2/-1.
+    # Leaves under a layer stack NEVER shard dim 0 (it is the scan/layer axis and
+    # fragment extraction slices it).
+    layered = path.split("/")[0] in ("layers", "encoder", "decoder", "rem",
+                                     "groups")
+    if len(shape) >= 3 or (len(shape) == 2 and not layered):
+        for spec in (P(*([None] * (len(shape) - 2) + ["data", "model"])),
+                     P(*([None] * (len(shape) - 2) + [None, "model"])),
+                     P(*([None] * (len(shape) - 2) + ["data", None]))):
+            if _fits(spec, shape, axis_sizes):
+                return spec
+    elif len(shape) == 2:  # layered vector params (norms, decays, biases)
+        for spec in (P(None, "model"), P(None, "data")):
+            if _fits(spec, shape, axis_sizes):
+                return spec
+    return P()
+
+
+def param_specs(params_shape, mesh, *, profile: str = "2d",
+                overrides=None) -> object:
+    """Pytree of PartitionSpec matching params (no worker axis).
+
+    profile:
+      "2d"  — FSDP('data') x TP('model') weight sharding (default; baseline).
+      "dp"  — pure data parallelism: params replicated, batch over BOTH axes.
+              Beyond-paper optimization for sub-1B archs where TP=16 makes the
+              per-device matmuls tiny and collective-bound (§Perf iteration 2).
+    overrides: list of (regex, [candidate specs]) consulted before _RULES —
+      used by perf iterations to test alternative layouts without forking the
+      rule table.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fn(path, leaf):
+        p = _path_str(path)
+        if profile == "dp":
+            return P()
+        if overrides:
+            for pat, candidates in overrides:
+                if re.match(pat, p):
+                    for spec in candidates:
+                        if _fits(spec, leaf.shape, axis_sizes):
+                            return spec
+                    return P()
+        return spec_for_leaf(p, leaf.shape, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def stack_spec(spec_tree, axis_name: str = "pod"):
+    """Prepend the worker/pod axis to every spec (for worker-stacked pytrees)."""
+    return jax.tree.map(lambda s: P(axis_name, *s), spec_tree)
+
+
+def batch_specs(batch_shape, mesh, *, pod: bool = False,
+                profile: str = "2d") -> object:
+    """Batch-dim sharding over ('pod','data') — or ('pod','data','model') for
+    the pure-DP profile — with divisibility fallback."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = ("data", "model") if profile == "dp" else ("data",)
+
+    def fn(leaf):
+        b = leaf.shape[1] if pod else leaf.shape[0]
+        total = 1
+        for a in dp_axes:
+            total *= axis_sizes.get(a, 1)
+        if b % total == 0:
+            body = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        elif b % axis_sizes.get("data", 1) == 0:
+            body = "data"
+        else:
+            body = None
+        dims = [body] + [None] * (len(leaf.shape) - (2 if pod else 1))
+        if pod:
+            return P("pod", *dims)
+        return P(*dims)
+
+    return jax.tree.map(fn, batch_shape)
+
+
+def cache_specs(cache_shape, mesh, *, pod: bool = False) -> object:
+    """KV-cache/state sharding: batch dim over `data` when divisible, head/expert
+    dims over `model` when divisible, replicate otherwise. Cache layouts:
+    (L, B, C, KV, hd) / rwkv (L, B, ...) / scalars."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fn(leaf):
+        shape = leaf.shape
+        off = 1 if pod else 0
+        dims = [None] * len(shape)
+        if pod:
+            dims[0] = "pod"
+        # find the batch dim: axis off+1 for (L,B,...) layouts of rank>=3
+        if len(shape) >= off + 3:
+            bdim = off + 1
+            if shape[bdim] % axis_sizes.get("data", 1) == 0:
+                dims[bdim] = "data"
+            # shard a trailing "heads-like" dim over model if divisible
+            for d in range(len(shape) - 2, bdim, -1):
+                if shape[d] % axis_sizes.get("model", 1) == 0 and shape[d] >= axis_sizes.get("model", 1):
+                    dims[d] = "model"
+                    break
+        return P(*dims)
+
+    return jax.tree.map(fn, cache_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def recommended_profile(param_count: int, mesh) -> str:
+    """Pick the intra-pod sharding profile (§Perf iteration 2): below ~2B params
+    the per-device TP matmuls are too small to amortize the activation
+    all-reduces and pure DP wins 84x on the collective term; above that the 2-D
+    FSDP x TP layout is required for memory anyway."""
+    n_chips = mesh.devices.size if hasattr(mesh, "devices") else 256
+    # DP must fit params + f32 AdamW moments replicated: ~16 bytes/param
+    fits_replicated = param_count * 16 <= 12e9   # leave ~4 GB for activations
+    return "dp" if (param_count < 2e9 and fits_replicated) else "2d"

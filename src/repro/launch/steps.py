@@ -1,0 +1,232 @@
+"""Jitted step functions + abstract input specs for launch/dry-run.
+
+  train_step(params, opt_state, batch, lr)      — inner AdamW step (one worker)
+  pod_train_step                                — worker-stacked (leading pod axis)
+  serve_step(params, cache, tokens)             — one-token decode
+  sync_step(params_stack, theta_g, momentum)    — CoCoDC fragment sync: pseudo-
+      gradient mean over the pod axis (THE cross-region collective), outer
+      Nesterov update, Algorithm-1 delay compensation. Used by the multi-pod
+      dry-run to prove the pod-axis collective lowers.
+
+All input specs are ShapeDtypeStructs (no allocation); shardings come from
+launch/sharding.py rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import CoCoDCConfig, InputShape, ModelConfig
+from repro.core import delay_comp as dc_lib
+from repro.core import outer_opt
+from repro.launch import sharding as shd
+from repro.models import api
+from repro.optim import adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(api.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_sds, moment_dtype=jnp.float32):
+    return jax.eval_shape(
+        functools.partial(adamw_init, moment_dtype=moment_dtype), params_sds)
+
+
+def abstract_batch(cfg: ModelConfig, shape: InputShape,
+                   batch_override: Optional[int] = None):
+    shapes = api.batch_shapes(cfg, shape, batch_override)
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    cache_len = api.decode_cache_len(cfg, seq_len)
+    return jax.eval_shape(
+        functools.partial(api.init_cache, cfg, batch, cache_len))
+
+
+def stack_sds(tree, m: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((m,) + s.shape, s.dtype), tree)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, pods: int = 0,
+                moment_dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins for one (arch x input-shape) dry-run.
+    pods=0 -> single-pod (no worker axis). Returns dict by step kind."""
+    params = abstract_params(cfg)
+    if shape.kind == "decode":
+        per_pod_batch = shape.global_batch if pods == 0 else max(
+            1, shape.global_batch // pods)
+        cache = abstract_cache(cfg, per_pod_batch, shape.seq_len)
+        tokens = jax.ShapeDtypeStruct((per_pod_batch,), jnp.int32)
+        if pods:
+            params = stack_sds(params, pods)
+            cache = stack_sds(cache, pods)
+            tokens = jax.ShapeDtypeStruct((pods, per_pod_batch), jnp.int32)
+        return {"params": params, "cache": cache, "tokens": tokens}
+    batch_override = None if pods == 0 else max(1, shape.global_batch // pods)
+    batch = abstract_batch(cfg, shape, batch_override)
+    opt = abstract_opt_state(params, moment_dtype)
+    if pods:
+        params = stack_sds(params, pods)
+        opt = stack_sds(opt, pods)
+        batch = stack_sds(batch, pods)
+    return {"params": params, "opt_state": opt, "batch": batch,
+            "lr": jax.ShapeDtypeStruct((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, *, weight_decay: float = 0.1,
+                    xent_chunk: int = 512, remat: bool = True,
+                    unroll: bool = False, seq_parallel: bool = False):
+    kw = {"seq_parallel": True} if seq_parallel else {}
+
+    def train_step(params, opt_state, batch, lr):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: api.loss_fn(cfg, p, batch, remat=remat,
+                                  xent_chunk=xent_chunk, unroll=unroll, **kw),
+            has_aux=True)(params)
+        params, opt_state = adamw_update(grads, opt_state, params, lr,
+                                         weight_decay=weight_decay)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_pod_train_step(cfg: ModelConfig, **kw):
+    """Worker-stacked train step: vmap over the leading pod axis. Pod-local by
+    construction — the dry-run asserts its HLO has no pod-axis collective."""
+    step = make_train_step(cfg, **kw)
+    return jax.vmap(step, in_axes=(0, 0, 0, None))
+
+
+def make_serve_step(cfg: ModelConfig, *, window: Optional[int] = None,
+                    unroll: bool = False):
+    def serve_step(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens, window=window,
+                               unroll=unroll)
+
+    return serve_step
+
+
+def make_pod_serve_step(cfg: ModelConfig, **kw):
+    return jax.vmap(make_serve_step(cfg, **kw), in_axes=(0, 0, 0))
+
+
+def make_sync_step(cfg: ModelConfig, ccfg: CoCoDCConfig, fragmenter, frag_id: int):
+    """One fragment synchronization (initiate+deliver fused for lowering):
+      delta   = mean_pods(theta^m_p - theta^g_p)        <- pod all-reduce
+      theta^g = Nesterov(theta^g, delta)
+      theta^m = DelayComp(theta^m_now, theta^m_snap, theta^g)   (Algorithm 1)
+    params_snapshot is the t_p worker-local fragment state."""
+
+    sync_dt = jnp.dtype(ccfg.sync_dtype)
+
+    def sync_step(params_stack, params_snapshot_frag, theta_g, momentum):
+        frag_now = fragmenter.extract(params_stack, frag_id, worker_axis=True)
+        g_frag = fragmenter.extract(theta_g, frag_id)
+        m_frag = fragmenter.extract(momentum, frag_id)
+        # pseudo-gradients cross the WAN in ccfg.sync_dtype (bf16 halves the
+        # cross-region payload); accumulation back in f32
+        deltas = jax.tree.map(
+            lambda x, g: None if x is None
+            else (x - g[None]).astype(sync_dt), frag_now, g_frag,
+            is_leaf=lambda x: x is None)
+        m = ccfg.num_workers
+        delta_avg = jax.tree.map(
+            lambda d: None if d is None
+            else jnp.sum(d, axis=0, dtype=sync_dt) / jnp.asarray(m, sync_dt),
+            deltas, is_leaf=lambda x: x is None)
+        if sync_dt != jnp.float32:
+            # keep the collective itself in sync_dt: without a barrier XLA
+            # hoists the f32 upcast ahead of the all-reduce (convert-of-sum ==
+            # sum-of-converts) and the wire format silently stays f32
+            flat = [d for d in jax.tree.leaves(
+                delta_avg, is_leaf=lambda x: x is None) if d is not None]
+            flat = list(jax.lax.optimization_barrier(tuple(flat)))
+            it = iter(flat)
+            delta_avg = jax.tree.map(
+                lambda d: None if d is None else next(it), delta_avg,
+                is_leaf=lambda x: x is None)
+        delta_avg = jax.tree.map(
+            lambda d: None if d is None else d.astype(jnp.float32), delta_avg,
+            is_leaf=lambda x: x is None)
+        new_g, new_m = outer_opt.nesterov_update(
+            g_frag, m_frag, delta_avg, lr=ccfg.outer_lr, mu=ccfg.outer_momentum)
+        compensated = dc_lib.compensate(
+            frag_now, params_snapshot_frag,
+            jax.tree.map(lambda g: None if g is None else g[None], new_g,
+                         is_leaf=lambda x: x is None),
+            tau=float(ccfg.overlap_depth), lam=ccfg.comp_lambda,
+            H=float(ccfg.local_steps), sign=ccfg.eq4_sign, impl="ref")
+        params_stack = fragmenter.insert(params_stack, frag_id, compensated,
+                                         worker_axis=True)
+        theta_g = fragmenter.insert(theta_g, frag_id, new_g)
+        momentum = fragmenter.insert(momentum, frag_id, new_m)
+        return params_stack, theta_g, momentum
+
+    return sync_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(cfg: ModelConfig, shape: InputShape, mesh, *,
+                  pods: int = 0, moment_dtype=jnp.float32, profile: str = "2d",
+                  overrides=None):
+    """NamedSharding pytrees for the step inputs (matching input_specs)."""
+    pod = pods > 0
+    params_sds = abstract_params(cfg)
+    pspec = shd.param_specs(params_sds, mesh, profile=profile,
+                            overrides=overrides)
+    if pod:
+        pspec = shd.stack_spec(pspec)
+    out = {}
+    if shape.kind == "decode":
+        per_pod_batch = shape.global_batch if pods == 0 else max(
+            1, shape.global_batch // pods)
+        cache_sds = abstract_cache(cfg, per_pod_batch, shape.seq_len)
+        if pod:
+            cache_sds = stack_sds(cache_sds, pods)
+        cspec = shd.cache_specs(cache_sds, mesh, pod=pod)
+        tok_spec = P("pod", None) if pod else P(None)
+        out = {"params": pspec, "cache": cspec, "tokens": tok_spec}
+    else:
+        batch_override = None if pods == 0 else max(1, shape.global_batch // pods)
+        batch_sds = abstract_batch(cfg, shape, batch_override)
+        if pod:
+            batch_sds = stack_sds(batch_sds, pods)
+        bspec = shd.batch_specs(batch_sds, mesh, pod=pod, profile=profile)
+        ospec = jax.eval_shape(
+            functools.partial(adamw_init, moment_dtype=moment_dtype), params_sds)
+        ospec = jax.tree.map(lambda s: P(), ospec)  # overwritten below
+        # optimizer moments shard exactly like params; count is replicated
+        pspec_noworker = shd.param_specs(params_sds, mesh, profile=profile,
+                                         overrides=overrides)
+        mspec = {"mu": pspec_noworker, "nu": pspec_noworker, "count": P()}
+        if pod:
+            mspec = {"mu": shd.stack_spec(mspec["mu"]),
+                     "nu": shd.stack_spec(mspec["nu"]), "count": P()}
+        from repro.optim.adamw import AdamWState
+        opt_spec = AdamWState(mu=mspec["mu"], nu=mspec["nu"], count=mspec["count"])
+        out = {"params": pspec, "opt_state": opt_spec, "batch": bspec,
+               "lr": P()}
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), out,
+                        is_leaf=lambda x: isinstance(x, P))

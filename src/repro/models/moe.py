@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN with FLOP-lean gather/scatter (capacity) dispatch.
+
+Dense one-hot dispatch einsums cost O(T·E·C·D) matmul FLOPs which would swamp the
+roofline at dbrx scale; instead we sort token-expert pairs by expert, scatter into an
+(E, C, D) buffer (memory ops, no FLOPs), run the per-expert SwiGLU as a batched
+einsum, and scatter-add back. Dropless up to the capacity factor; overflow tokens
+fall back to identity (standard Switch behaviour).
+
+Expert weights are stacked (L, E, D, F) and sharded expert-parallel over the `model`
+mesh axis (see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array   # Switch-style load-balance loss
+    overflow_frac: jax.Array
+
+
+def init_moe_params(key, n_layers: int, d_model: int, d_ff: int, moe: MoEConfig, dtype):
+    ks = jax.random.split(key, 4)
+    E = moe.num_experts
+    return {
+        "router": dense_init(ks[0], (n_layers, d_model, E), jnp.float32, fan_in=d_model),
+        "w_gate": dense_init(ks[1], (n_layers, E, d_model, d_ff), dtype, fan_in=d_model),
+        "w_up":   dense_init(ks[2], (n_layers, E, d_model, d_ff), dtype, fan_in=d_model),
+        "w_down": dense_init(ks[3], (n_layers, E, d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def capacity(moe: MoEConfig, n_tokens: int, capacity_factor: float = 1.25) -> int:
+    c = math.ceil(moe.top_k * n_tokens / moe.num_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)  # >=8, multiple of 8 (TPU sublane alignment)
+
+
+def moe_ffn(x, lp, moe: MoEConfig, *, capacity_factor: float = 1.25) -> MoEOut:
+    """x: (B, S, D); lp: per-layer slice {router,(D,E); w_gate/w_up,(E,D,F); w_down,(E,F,D)}."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.num_experts, moe.top_k
+    C = capacity(moe, T, capacity_factor)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ lp["router"])                 # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                           # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # ---- sort token-expert pairs by expert id -----------------------------
+    flat_e = top_e.reshape(T * K)
+    sort_idx = jnp.argsort(flat_e, stable=True)                      # (T*K,)
+    sorted_e = flat_e[sort_idx]
+    # position within expert = rank - index of first pair with the same expert
+    first_of_expert = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(T * K) - first_of_expert
+    overflow = pos_in_e >= C
+    slot = jnp.where(overflow, E * C, sorted_e * C + pos_in_e)       # E*C = trash slot
+
+    token_of_pair = sort_idx // K                                    # (T*K,)
+    xs = xf[token_of_pair]                                           # gather (T*K, D)
+    disp = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xs)[:E * C]
+    disp = disp.reshape(E, C, D)
+
+    # ---- per-expert SwiGLU (batched over experts) -------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, lp["w_gate"],
+                               preferred_element_type=jnp.float32)) * \
+        jnp.einsum("ecd,edf->ecf", disp, lp["w_up"],
+                   preferred_element_type=jnp.float32)
+    y_exp = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), lp["w_down"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    y_exp = y_exp.reshape(E * C, D)
+
+    # ---- combine back ------------------------------------------------------
+    pair_w = top_w.reshape(T * K)[sort_idx].astype(x.dtype)          # (T*K,)
+    y_pairs = jnp.where(overflow[:, None], jnp.zeros((), x.dtype),
+                        y_exp[jnp.minimum(slot, E * C - 1)] * pair_w[:, None])
+    y = jnp.zeros((T, D), x.dtype).at[token_of_pair].add(y_pairs).reshape(B, S, D)
+
+    # ---- Switch load-balance loss ------------------------------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs) * moe.load_balance_coef
+    return MoEOut(y, aux, jnp.mean(overflow.astype(jnp.float32)))

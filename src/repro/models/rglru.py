@@ -1,0 +1,300 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent blocks and
+local-MQA attention blocks interleaved by `cfg.block_pattern` (1 attn : 2 lru).
+
+Residual block = pre-norm temporal mixer (+residual) then pre-norm SwiGLU MLP
+(+residual). Recurrent mixer:
+    u = gelu(x W_gate);  z = conv1d_causal(x W_in, width 4);  h = RGLRU(z)
+    y = (u * h) W_out
+RG-LRU:  r,i = sigm(z W_a + b_a), sigm(z W_x + b_x)
+         log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * z_t)
+Train/prefill uses jax.lax.associative_scan (parallel over T — TPU-friendly) or the
+Pallas chunked kernel (kernels/rglru_scan); decode carries (h, conv tail) — O(1) per
+token, so long_500k is native. Layer stacking: `lax.scan` over pattern groups,
+remainder blocks unrolled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (attn_out, attn_qkv, chunked_cross_entropy, dense_init,
+                                 embed_init, gqa_attention, init_attn_params, rms_norm,
+                                 swiglu)
+from repro.models.layers import cast_params_for_compute
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _init_mlp(key, n, D, F, dtype):
+    ks = jax.random.split(key, 3)
+    return {"w_gate": dense_init(ks[0], (n, D, F), dtype, fan_in=D),
+            "w_up": dense_init(ks[1], (n, D, F), dtype, fan_in=D),
+            "w_down": dense_init(ks[2], (n, F, D), dtype, fan_in=F)}
+
+
+def _init_rglru_mixer(key, n, D, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_br": dense_init(ks[0], (n, D, D), dtype, fan_in=D),
+        "w_in": dense_init(ks[1], (n, D, D), dtype, fan_in=D),
+        "w_out": dense_init(ks[2], (n, D, D), dtype, fan_in=D),
+        "conv_w": dense_init(ks[3], (n, CONV_WIDTH, D), dtype, fan_in=CONV_WIDTH),
+        "conv_b": jnp.zeros((n, D), dtype),
+        "wa": dense_init(ks[4], (n, D, D), dtype, fan_in=D),
+        "ba": jnp.zeros((n, D), dtype),
+        "wx": dense_init(ks[5], (n, D, D), dtype, fan_in=D),
+        "bx": jnp.zeros((n, D), dtype),
+        # Lambda init so that a^c = sigma(Lambda)^c in [0.9, 0.999] roughly
+        "lam": jnp.full((n, D), 0.7, dtype),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, n: int, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    mixer = (_init_rglru_mixer(ks[0], n, D, dtype) if kind == "rglru"
+             else init_attn_params(ks[0], cfg, n, dtype))
+    return {"kind_attn": kind == "attn", "mixer": mixer,
+            "mlp": _init_mlp(ks[1], n, D, F, dtype),
+            "ln1": jnp.ones((n, D), dtype), "ln2": jnp.ones((n, D), dtype)}
+
+
+def _pattern_counts(cfg: ModelConfig):
+    P = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // P
+    rem = tuple(cfg.block_pattern[: cfg.n_layers % P])
+    return n_groups, rem
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_groups, rem = _pattern_counts(cfg)
+    ks = jax.random.split(key, len(cfg.block_pattern) + len(rem) + 2)
+    layers = {f"p{j}": {k: v for k, v in
+                        _init_block(ks[j], cfg, kind, n_groups, dtype).items()
+                        if k != "kind_attn"}
+              for j, kind in enumerate(cfg.block_pattern)}
+    rem_blocks = [{k: v for k, v in
+                   _init_block(ks[len(cfg.block_pattern) + j], cfg, kind, 1, dtype).items()
+                   if k != "kind_attn"}
+                  for j, kind in enumerate(rem)]
+    return {
+        "embed": embed_init(ks[-2], (cfg.vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "rem": rem_blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[-1], (cfg.d_model, cfg.vocab), dtype,
+                              fan_in=cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv primitives
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(z, w, b, state=None):
+    """Depthwise causal conv. z: (B,T,D); w: (W,D); state: (B,W-1,D) carry-in.
+    Returns (out (B,T,D), new_state (B,W-1,D))."""
+    B, T, D = z.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, D), z.dtype)
+    zp = jnp.concatenate([state, z], axis=1)               # (B, T+W-1, D)
+    out = sum(zp[:, i:i + T] * w[i] for i in range(W)) + b
+    return out.astype(z.dtype), zp[:, -(W - 1):]
+
+
+def rglru(z, mixer, h0=None, impl="ref"):
+    """z: (B,T,D) conv output. Returns (h (B,T,D), h_last (B,D) f32)."""
+    zf = z.astype(jnp.float32)
+    r = jax.nn.sigmoid(zf @ mixer["wa"].astype(jnp.float32) + mixer["ba"])
+    i = jax.nn.sigmoid(zf @ mixer["wx"].astype(jnp.float32) + mixer["bx"])
+    log_a = -LRU_C * jax.nn.softplus(mixer["lam"].astype(jnp.float32)) * r  # (B,T,D)
+    gated = i * zf
+    b = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12)) * gated
+    a = jnp.exp(log_a)
+    if impl == "kernel":
+        from repro.kernels.rglru_scan import ops as lru_ops
+        h = lru_ops.lru_scan(a, b, h0)
+    else:
+        if h0 is not None:
+            # fold carry-in into the first step: h_1 = a_1 h_0 + b_1
+            b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(z.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_mixer_apply(cfg, x, mixer, state=None, impl="ref"):
+    """state: None (train) or {"conv": (B,W-1,D), "h": (B,D)}."""
+    u = jax.nn.gelu(x @ mixer["w_gate_br"])
+    z = x @ mixer["w_in"]
+    z, conv_state = causal_conv1d(z, mixer["conv_w"], mixer["conv_b"],
+                                  None if state is None else state["conv"])
+    h, h_last = rglru(z, mixer, None if state is None else state["h"], impl=impl)
+    y = (u * h) @ mixer["w_out"]
+    return y, {"conv": conv_state, "h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(cfg, x, bp, kind, positions, attn_impl, lru_impl):
+    h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+    if kind == "attn":
+        q, k, v = attn_qkv(h, bp["mixer"], cfg, positions)
+        o = gqa_attention(q, k, v, causal=True, window=cfg.attn_window,
+                          q_positions=positions, kv_positions=positions)
+        x = x + attn_out(o, bp["mixer"], cfg)
+    else:
+        y, _ = rglru_mixer_apply(cfg, h, bp["mixer"], impl=lru_impl)
+        x = x + y
+    h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+    return x + swiglu(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"], bp["mlp"]["w_down"])
+
+
+def forward(cfg: ModelConfig, params, batch, *, train=True, attn_impl="ref",
+            remat=True, lru_impl="ref", unroll=False):
+    params = cast_params_for_compute(cfg, params)
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.compute_dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    n_groups, rem = _pattern_counts(cfg)
+
+    def group_body(x, glp):
+        for j, kind in enumerate(cfg.block_pattern):
+            x = _block_apply(cfg, x, glp[f"p{j}"], kind, positions, attn_impl,
+                             lru_impl)
+        return x, None
+
+    if unroll:  # roofline probes
+        for g in range(n_groups):
+            x, _ = group_body(x, jax.tree.map(lambda a: a[g], params["layers"]))
+    else:
+        body_fn = jax.checkpoint(group_body) if (train and remat) else group_body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    for j, kind in enumerate(rem):
+        bp = jax.tree.map(lambda a: a[0], params["rem"][j])
+        x = _block_apply(cfg, x, bp, kind, positions, attn_impl, lru_impl)
+    h = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return h, {"moe_aux": jnp.zeros(()), "n_prefix": 0}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl="ref", remat=True,
+            xent_chunk: int = 512, unroll=False):
+    h, _ = forward(cfg, params, batch, train=True, attn_impl=attn_impl, remat=remat,
+                   unroll=unroll)
+    nll = chunked_cross_entropy(h, params["lm_head"], batch["labels"], chunk=xent_chunk)
+    return nll, {"nll": nll, "ppl": jnp.exp(nll)}
+
+
+# ---------------------------------------------------------------------------
+# decode — O(1) state (recurrent) + ring-buffer window cache (attn blocks)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    D, hd = cfg.d_model, cfg.resolved_head_dim
+    C = min(cache_len, cfg.attn_window)   # local attention never needs more
+    n_groups, rem = _pattern_counts(cfg)
+
+    def block_cache(kind, n):
+        if kind == "attn":
+            return {"k": jnp.zeros((n, batch_size, C, cfg.n_kv_heads, hd), dt),
+                    "v": jnp.zeros((n, batch_size, C, cfg.n_kv_heads, hd), dt)}
+        return {"conv": jnp.zeros((n, batch_size, CONV_WIDTH - 1, D), dt),
+                "h": jnp.zeros((n, batch_size, D), jnp.float32)}
+
+    return {
+        "groups": {f"p{j}": block_cache(kind, n_groups)
+                   for j, kind in enumerate(cfg.block_pattern)},
+        "rem": [block_cache(kind, 1) for kind in rem],
+        "kv_pos": jnp.full((C,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decode_block(cfg, x, bp, kind, cache, slot, positions, kv_positions, kv_mask,
+                  lru_impl):
+    h = rms_norm(x, bp["ln1"], cfg.rms_eps)
+    if kind == "attn":
+        q, k, v = attn_qkv(h, bp["mixer"], cfg, positions)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        o = gqa_attention(q, kc, vc, causal=True, window=cfg.attn_window,
+                          q_positions=positions, kv_positions=kv_positions,
+                          kv_mask=kv_mask)
+        x = x + attn_out(o, bp["mixer"], cfg)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        y, new_cache = rglru_mixer_apply(cfg, h, bp["mixer"], state=cache,
+                                         impl=lru_impl)
+        x = x + y
+    h = rms_norm(x, bp["ln2"], cfg.rms_eps)
+    x = x + swiglu(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"], bp["mlp"]["w_down"])
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, window=None,
+                attn_impl="ref", lru_impl="ref", unroll=False):
+    params = cast_params_for_compute(cfg, params)
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    C = cache["kv_pos"].shape[0]
+    slot = pos % C
+    kv_pos = cache["kv_pos"].at[slot].set(pos)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    kv_positions = jnp.broadcast_to(kv_pos[None], (B, C))
+    kv_mask = kv_positions >= 0
+    x = params["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.compute_dtype))
+    n_groups, rem = _pattern_counts(cfg)
+
+    def group_body(x, xs):
+        glp, gcache = xs
+        new_caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x, nc = _decode_block(cfg, x, glp[f"p{j}"], kind, gcache[f"p{j}"], slot,
+                                  positions, kv_positions, kv_mask, "ref")
+            new_caches[f"p{j}"] = nc
+        return x, new_caches
+
+    if unroll:
+        caches_l = []
+        for g in range(n_groups):
+            xs_g = jax.tree.map(lambda a: a[g], (params["layers"], cache["groups"]))
+            x, nc = group_body(x, xs_g)
+            caches_l.append(nc)
+        new_group_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches_l)
+    else:
+        x, new_group_caches = jax.lax.scan(group_body, x,
+                                           (params["layers"], cache["groups"]))
+    new_rem = []
+    for j, kind in enumerate(rem):
+        bp = jax.tree.map(lambda a: a[0], params["rem"][j])
+        bc = jax.tree.map(lambda a: a[0], cache["rem"][j])
+        x, nc = _decode_block(cfg, x, bp, kind, bc, slot, positions, kv_positions,
+                              kv_mask, "ref")
+        new_rem.append(jax.tree.map(lambda a: a[None], nc))
+    h = rms_norm(x[:, 0], params["final_norm"], cfg.rms_eps)
+    logits = h.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits, {"groups": new_group_caches, "rem": new_rem, "kv_pos": kv_pos,
+                    "pos": pos + 1}

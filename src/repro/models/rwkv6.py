@@ -1,0 +1,235 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free SSM family.
+
+Per layer: time-mix block (data-dependent token-shift ddlerp + data-dependent decay
+WKV recurrence with matrix-valued per-head state) and channel-mix block (squared-ReLU
+MLP with receptance gate). Matches the Finch formulation; LayerNorms are RMSNorms
+(simplification noted in DESIGN.md).
+
+The WKV recurrence per head (state S in R^{hd x hd}):
+    o_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+Train/prefill uses a chunked form (kernels/rwkv6_scan on TPU, jnp scan ref here);
+decode carries S directly — O(1) per token, which is why long_500k is native.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import chunked_cross_entropy, dense_init, embed_init, rms_norm
+from repro.models.layers import cast_params_for_compute
+
+LORA_RANK = 32
+
+
+def _lora_rank(cfg: ModelConfig) -> int:
+    return min(LORA_RANK, max(4, cfg.d_model // 16))
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    H = D // cfg.rwkv_head_dim
+    r = _lora_rank(cfg)
+    ks = jax.random.split(key, 24)
+    i = iter(range(24))
+    tm = {
+        # ddlerp static mix coefficients (mu_x plus one per r,w,k,v,g)
+        "mu_x": jnp.zeros((L, D), dtype),
+        "mu":   jnp.zeros((L, 5, D), dtype),
+        # data-dependent lerp loras: (5, D, r) and (5, r, D)
+        "lora_a": dense_init(ks[next(i)], (L, 5, D, r), dtype, fan_in=D),
+        "lora_b": jnp.zeros((L, 5, r, D), dtype),
+        # decay: w = exp(-exp(w0 + tanh(xw @ wa) @ wb))
+        "w0": jnp.full((L, D), -6.0, dtype),
+        "wa": dense_init(ks[next(i)], (L, D, r), dtype, fan_in=D),
+        "wb": jnp.zeros((L, r, D), dtype),
+        "u":  jnp.zeros((L, D), dtype),          # bonus for current token
+        "wr": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+        "wk": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+        "wv": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+        "wg": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+        "wo": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+        "gn": jnp.ones((L, D), dtype),           # per-head group norm scale
+    }
+    cm = {
+        "mu_k": jnp.zeros((L, D), dtype),
+        "mu_r": jnp.zeros((L, D), dtype),
+        "wk": dense_init(ks[next(i)], (L, D, F), dtype, fan_in=D),
+        "wv": dense_init(ks[next(i)], (L, F, D), dtype, fan_in=F),
+        "wr": dense_init(ks[next(i)], (L, D, D), dtype, fan_in=D),
+    }
+    return {
+        "embed": embed_init(ks[next(i)], (V, D), dtype),
+        "layers": {"tm": tm, "cm": cm,
+                   "ln1": jnp.ones((L, D), dtype), "ln2": jnp.ones((L, D), dtype)},
+        "final_norm": jnp.ones((D,), dtype),
+        "lm_head": dense_init(ks[next(i)], (D, V), dtype, fan_in=D),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv recurrence (reference; the Pallas kernel lives in kernels/rwkv6_scan)
+# ---------------------------------------------------------------------------
+
+
+def wkv_scan_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w: (B,T,H,hd); u: (H,hd). Returns (o: (B,T,H,hd), sT: (B,H,hd,hd))."""
+    B, T, H, hd = r.shape
+    s0 = s0 if s0 is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                       # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + u[None] [..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), sT
+
+
+def _group_norm(o, scale, eps):
+    # o: (B,T,H,hd): normalize per head
+    of = o.astype(jnp.float32)
+    mu = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + eps)
+    B, T, H, hd = o.shape
+    return (of.reshape(B, T, H * hd) * scale.astype(jnp.float32)).astype(o.dtype)
+
+
+def _ddlerp(x, x_prev, tm):
+    """Finch data-dependent token-shift. x,x_prev: (B,T,D). Returns 5 mixed streams
+    (r,w,k,v,g) each (B,T,D)."""
+    dx = x_prev - x
+    xx = x + dx * tm["mu_x"]
+    # (B,T,5,r) = tanh(xx @ lora_a); (B,T,5,D) = @ lora_b
+    z = jnp.tanh(jnp.einsum("btd,ndr->btnr", xx, tm["lora_a"]))
+    dyn = jnp.einsum("btnr,nrd->btnd", z, tm["lora_b"])
+    mix = tm["mu"][None, None] + dyn                           # (B,T,5,D)
+    return tuple(x + dx * mix[:, :, j] for j in range(5))
+
+
+def time_mix(cfg: ModelConfig, x, x_prev, tm, s0=None, wkv_impl="ref"):
+    """x: (B,T,D); x_prev: x shifted right by one (first slot = carry-in).
+    Returns (y, sT)."""
+    B, T, D = x.shape
+    H, hd = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xr, xw, xk, xv, xg = _ddlerp(x, x_prev, tm)
+    r = (xr @ tm["wr"]).reshape(B, T, H, hd)
+    kk = (xk @ tm["wk"]).reshape(B, T, H, hd)
+    vv = (xv @ tm["wv"]).reshape(B, T, H, hd)
+    g = xg @ tm["wg"]
+    logw = tm["w0"][None, None] + jnp.einsum(
+        "btd,dr->btr", jnp.tanh(xw), tm["wa"]) @ tm["wb"]
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32))).reshape(B, T, H, hd)
+    u = tm["u"].reshape(H, hd).astype(jnp.float32)
+    if wkv_impl == "kernel":
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+        o, sT = wkv_ops.wkv_scan(r, kk, vv, w.astype(r.dtype), u, s0)
+    else:
+        o, sT = wkv_scan_ref(r, kk, vv, w.astype(r.dtype), u, s0)
+    o = _group_norm(o, tm["gn"], cfg.rms_eps)
+    y = (o * jax.nn.silu(g)) @ tm["wo"]
+    return y, sT
+
+
+def channel_mix(x, x_prev, cm):
+    dx = x_prev - x
+    xk = x + dx * cm["mu_k"]
+    xr = x + dx * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    return jax.nn.sigmoid(xr @ cm["wr"]) * (k @ cm["wv"])
+
+
+def _shift(x, carry_in=None):
+    """token shift: y[:, t] = x[:, t-1]; y[:, 0] = carry_in (or 0)."""
+    y = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if carry_in is not None:
+        y = y.at[:, 0].set(carry_in)
+    return y
+
+
+def forward(cfg: ModelConfig, params, batch, *, train=True, attn_impl="ref",
+            remat=True, wkv_impl="ref", unroll=False):
+    params = cast_params_for_compute(cfg, params)
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        y, _ = time_mix(cfg, h, _shift(h), lp["tm"], wkv_impl=wkv_impl)
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + channel_mix(h, _shift(h), lp["cm"])
+        return x, jnp.zeros((), jnp.float32)
+
+    if unroll:  # roofline probes
+        for l in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[l], params["layers"]))
+    else:
+        body_fn = jax.checkpoint(body) if (train and remat) else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    h = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return h, {"moe_aux": jnp.zeros(()), "n_prefix": 0}
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, attn_impl="ref", remat=True,
+            xent_chunk: int = 512, unroll=False):
+    h, _ = forward(cfg, params, batch, train=True, remat=remat, unroll=unroll)
+    nll = chunked_cross_entropy(h, params["lm_head"], batch["labels"], chunk=xent_chunk)
+    return nll, {"nll": nll, "ppl": jnp.exp(nll)}
+
+
+# ---------------------------------------------------------------------------
+# decode — O(1) state per token
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int):
+    """cache_len is irrelevant for an SSM (constant-size state); kept for API parity."""
+    D = cfg.d_model
+    H, hd = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    L = cfg.n_layers
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "x_prev_tm": jnp.zeros((L, batch_size, D), dt),
+        "x_prev_cm": jnp.zeros((L, batch_size, D), dt),
+        "s": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, window=None,
+                attn_impl="ref", unroll=False):
+    params = cast_params_for_compute(cfg, params)
+    x = params["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, xs):
+        lp, xp_tm, xp_cm, s = xs
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        y, sT = time_mix(cfg, h, xp_tm[:, None, :], lp["tm"], s0=s)
+        new_xp_tm = h[:, 0]
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        x = x + channel_mix(h, xp_cm[:, None, :], lp["cm"])
+        return x, (new_xp_tm, h[:, 0], sT)
+
+    if unroll:
+        outs = []
+        for l in range(cfg.n_layers):
+            xs_l = jax.tree.map(lambda a: a[l], (params["layers"],
+                                cache["x_prev_tm"], cache["x_prev_cm"], cache["s"]))
+            x, out = body(x, xs_l)
+            outs.append(out)
+        xp_tm, xp_cm, s = (jnp.stack([o[i] for o in outs]) for i in range(3))
+    else:
+        x, (xp_tm, xp_cm, s) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["x_prev_tm"], cache["x_prev_cm"], cache["s"]))
+    h = rms_norm(x[:, 0], params["final_norm"], cfg.rms_eps)
+    logits = h.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits, {"x_prev_tm": xp_tm, "x_prev_cm": xp_cm, "s": s,
+                    "pos": cache["pos"] + 1}

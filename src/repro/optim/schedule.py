@@ -1,0 +1,15 @@
+"""LR schedules. Paper §IV: linear warmup (1000 steps) then cosine decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / max(1, warmup_steps)
+    progress = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+    cos = final_frac * base_lr + (1 - final_frac) * base_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, cos)

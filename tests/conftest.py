@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the real (1-device) CPU platform; ONLY the dry-run forces 512 devices
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants beyond the per-module suites."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delay_comp import blend, compensate
+from repro.core.outer_opt import init_state, nesterov_update
+from repro.kernels.delay_comp.ref import delay_comp_ref
+from repro.launch.sharding import recommended_profile
+
+
+class _M:
+    class _D:
+        size = 256
+    devices = _D()
+
+
+# ---------------------------------------------------------------------------
+# delay compensation algebraic properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000),
+       tau=st.floats(1.0, 20.0),
+       lam=st.floats(0.0, 2.0),
+       H=st.floats(1.0, 200.0))
+def test_compensate_fixed_point(seed, tau, lam, H):
+    """If local == snapshot == global, compensation is the identity."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16,))
+    out = delay_comp_ref(x, x, x, tau=tau, lam=lam, H=H)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 1000), tau=st.floats(1.0, 20.0))
+def test_compensate_lam0_linear_in_drift(seed, tau):
+    """lam=0: out = theta_g + (tl - tp) exactly, independent of tau."""
+    k = jax.random.PRNGKey(seed)
+    tl, tp, tg = (jax.random.normal(jax.random.fold_in(k, i), (8,))
+                  for i in range(3))
+    out = delay_comp_ref(tl, tp, tg, tau=tau, lam=0.0, H=10.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(tg + tl - tp),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), alpha=st.floats(0.0, 1.0))
+def test_blend_convexity(seed, alpha):
+    """Eq. 3 blending stays within the [local, global] interval elementwise."""
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(jax.random.fold_in(k, 0), (32,))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (32,))
+    out = blend({"w": a}, {"w": b}, alpha=alpha)["w"]
+    lo = jnp.minimum(a, b) - 1e-6
+    hi = jnp.maximum(a, b) + 1e-6
+    assert bool(jnp.all((out >= lo) & (out <= hi)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), mu=st.floats(0.0, 0.99),
+       lr=st.floats(0.01, 1.0))
+def test_nesterov_zero_delta_is_noop(seed, mu, lr):
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(seed), (8,))}
+    mom = init_state(theta)
+    t1, m1 = nesterov_update(theta, mom, {"w": jnp.zeros(8)}, lr=lr, mu=mu)
+    np.testing.assert_array_equal(np.asarray(t1["w"]), np.asarray(theta["w"]))
+    np.testing.assert_array_equal(np.asarray(m1["w"]), 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 100), mu=st.floats(0.0, 0.95))
+def test_nesterov_constant_delta_accumulates(seed, mu):
+    """Momentum of a constant delta converges toward delta/(1-mu) scale."""
+    theta = {"w": jnp.zeros(4)}
+    mom = init_state(theta)
+    delta = {"w": jnp.ones(4)}
+    prev = 0.0
+    for _ in range(50):
+        theta, mom = nesterov_update(theta, mom, delta, lr=0.1, mu=mu)
+        cur = float(theta["w"][0])
+        assert cur > prev  # monotone ascent along a constant pseudo-gradient
+        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# decode ring buffer long-run property
+# ---------------------------------------------------------------------------
+
+
+def test_ring_buffer_never_exceeds_window():
+    """Decoding far past the window keeps logits finite and cache bounded."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import api
+    cfg = dataclasses.replace(get_config("recurrentgemma_9b").reduced(),
+                              compute_dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    W = cfg.attn_window
+    extra = 9
+    cache = api.init_cache(cfg, 1, W)
+    tok = jnp.zeros((1,), jnp.int32)
+    step = jax.jit(lambda p, c, t: api.decode_step(cfg, p, c, t))
+    for t in range(W + extra):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert cache["kv_pos"].shape[0] == W          # bounded
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"]) == W + extra
+
+
+# ---------------------------------------------------------------------------
+# profile recommendation
+# ---------------------------------------------------------------------------
+
+
+def test_recommended_profile_boundaries():
+    assert recommended_profile(int(0.6e9), _M()) == "dp"
+    assert recommended_profile(int(405e9), _M()) == "2d"
+    assert recommended_profile(int(3e9), _M()) == "2d"
