@@ -32,16 +32,17 @@ def protocol_cfg(method: str, steps: int) -> CoCoDCConfig:
                         mixing_alpha=0.5)
 
 
-def run_method(method: str, steps: int, seed: int = 0):
+def run_method(method: str, steps: int, seed: int = 0,
+               engine_impl: str = "jit"):
     tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
                          total_steps=steps, warmup_steps=steps // 10,
                          inner_lr=3e-3, seed=seed, eval_batch=8,
-                         noniid_frac=0.3)
+                         noniid_frac=0.3, engine_impl=engine_impl)
     tr = CrossRegionTrainer(MODEL, protocol_cfg(method, steps), tcfg)
     with Timer() as t:
         hist = tr.run(eval_every=max(10, steps // 20), log=lambda s: None)
     return {"history": hist, "stats": tr.engine.stats(), "host_s": t.dt,
-            "trainer": tr}
+            "link_stats": tr.engine.link_stats(), "trainer": tr}
 
 
 def steps_to_ppl(hist, target):
@@ -57,7 +58,8 @@ def main(steps: int = 480, seeds=(0,)) -> dict:
         runs = []
         for seed in seeds:
             r = run_method(method, steps, seed)
-            runs.append({k: r[k] for k in ("history", "stats", "host_s")})
+            runs.append({k: r[k]
+                         for k in ("history", "stats", "host_s", "link_stats")})
         out[method] = runs
         final = runs[0]["history"][-1]
         emit(f"convergence/{method}",

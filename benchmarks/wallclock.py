@@ -1,17 +1,37 @@
 """Wall-clock efficiency under the WAN model (paper §IV-B discussion): DiLoCo's
 blocking synchronization vs Streaming/CoCoDC's overlapped transmission, across
-network regimes (latency x bandwidth). Pure protocol accounting — no training —
-so it covers the paper's 150M config AND the assigned big archs exactly.
+network regimes (latency x bandwidth) INCLUDING heterogeneous topologies
+(asymmetric 4-region mesh, hub-and-spoke hierarchical all-reduce). Pure
+protocol accounting — no training — so it covers the paper's 150M config AND
+the assigned big archs exactly.
+
+Also measures the HOST-SIDE per-step overhead of the protocol engine itself
+(the coordinator cost that rides on every local step): the functional jitted
+`EngineState` path vs the same transitions executed eagerly ("host", the
+legacy per-leaf tree-map churn).
+
+    PYTHONPATH=src python benchmarks/wallclock.py           # full sweep
+    PYTHONPATH=src python benchmarks/wallclock.py --smoke   # CI quick check
 """
 from __future__ import annotations
 
+import argparse
+import time
+
 import jax
+
+if __package__ in (None, ""):              # direct `python benchmarks/wallclock.py`
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import emit, save_json
 
 from repro.configs import CoCoDCConfig, get_config
+from repro.configs.base import ModelConfig
 from repro.core.fragments import make_fragmenter
-from repro.core.network import NetworkModel
+from repro.core.network import (NetworkModel, Topology, four_region_asymmetric,
+                                hub_and_spoke, transpacific_flaky)
 from repro.launch.steps import abstract_params
 
 REGIMES = {
@@ -21,9 +41,21 @@ REGIMES = {
 }
 
 
+def hetero_regimes(t_c: float):
+    """Heterogeneous topologies the scalar model cannot express."""
+    return {
+        "asym4_mesh": four_region_asymmetric(step_time_s=t_c),
+        "asym4_flaky": transpacific_flaky(step_time_s=t_c),
+        "hub_spoke_tree": hub_and_spoke(4, step_time_s=t_c,
+                                        spoke_latency_s=0.05,
+                                        spoke_bandwidth_Bps=1.25e9),
+    }
+
+
 def simulate(method: str, total_bytes: int, K: int, H: int, steps: int,
-             net: NetworkModel) -> dict:
-    """Closed-form protocol wall-clock over `steps` local steps."""
+             net) -> dict:
+    """Closed-form protocol wall-clock over `steps` local steps. `net` is any
+    cost model with t_c / allreduce_time (NetworkModel or Topology)."""
     rounds = steps // H
     t_c = net.t_c
     if method == "diloco":
@@ -47,22 +79,67 @@ def simulate(method: str, total_bytes: int, K: int, H: int, steps: int,
             "blocking_s": wall - steps * t_c}
 
 
-def main(steps: int = 1000) -> dict:
+# ---------------------------------------------------------------------------
+# host-side engine overhead: jitted EngineState vs eager host path
+# ---------------------------------------------------------------------------
+
+BENCH_MODEL = ModelConfig(name="bench-eng", family="dense", n_layers=4,
+                          d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                          vocab=256, compute_dtype="float32")
+
+
+def engine_overhead(method: str, engine_impl: str, steps: int = 96) -> float:
+    """Seconds of host+device time per on_step_end call (no inner training),
+    i.e. the coordinator overhead the protocol adds to every local step."""
+    import jax.numpy as jnp
+    from repro.core.protocol import ProtocolEngine
+    from repro.models import api
+
+    ccfg = CoCoDCConfig(num_workers=4, local_steps=12, num_fragments=4,
+                        overlap_depth=3)
+    params = api.init_params(BENCH_MODEL, jax.random.PRNGKey(0))
+    stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (4,) + a.shape).copy(), params)
+    shape = jax.eval_shape(lambda: params)
+    frag = make_fragmenter(BENCH_MODEL, shape, 4)
+    net = NetworkModel(num_workers=4, latency_s=0.05, bandwidth_Bps=1.25e9,
+                      step_time_s=1.0)
+
+    eng = ProtocolEngine(method, ccfg, frag, net, stack,
+                         engine_impl=engine_impl)
+    s = stack
+    warmup = 2 * ccfg.local_steps        # covers every fragment's compile
+    for t in range(warmup):
+        s = eng.on_step_end(t, s)
+    jax.block_until_ready(jax.tree.leaves(s)[0])
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + steps):
+        s = eng.on_step_end(t, s)
+    jax.block_until_ready(jax.tree.leaves(s)[0])
+    return (time.perf_counter() - t0) / steps
+
+
+def main(steps: int = 1000, smoke: bool = False) -> dict:
     out = {}
     archs = {
         "paper_150m": 1.0,          # paper's model: ~1 s/step on its A100 setup
         "qwen3_0_6b": 0.4,
         "llama3_405b": 25.0,        # per-step compute time scales with size
     }
+    if smoke:
+        archs = {"paper_150m": 1.0}
+        steps = min(steps, 400)
     for arch, t_c in archs.items():
         cfg = get_config(arch)
         params_sds = abstract_params(cfg)
         total_bytes = sum(
             int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params_sds))
         K, H = 4, 100
-        frag = None
-        for regime, netkw in REGIMES.items():
-            net = NetworkModel(num_workers=4, step_time_s=t_c, **netkw)
+        regimes: dict = {
+            name: NetworkModel(num_workers=4, step_time_s=t_c, **kw)
+            for name, kw in REGIMES.items()}
+        regimes.update(hetero_regimes(t_c))
+        for regime, net in regimes.items():
             row = {}
             for method in ("diloco", "streaming", "cocodc"):
                 r = simulate(method, total_bytes, K, H, steps, net)
@@ -74,9 +151,28 @@ def main(steps: int = 1000) -> dict:
                  f"speedup={speedup:.2f}x;"
                  f"hidden={row['cocodc']['hidden_s']:.0f}s")
             out[f"{arch}/{regime}"] = row
+
+    # coordinator overhead per local step: jitted EngineState vs eager host
+    overhead = {}
+    bench_steps = 48 if smoke else 96
+    for method in ("streaming", "cocodc"):
+        row = {}
+        for impl in ("host", "jit"):
+            row[impl] = engine_overhead(method, impl, steps=bench_steps)
+        row["speedup"] = row["host"] / row["jit"] if row["jit"] > 0 else 0.0
+        emit(f"engine_overhead/{method}", row["jit"] * 1e6,
+             f"host={row['host']*1e3:.2f}ms/step;jit={row['jit']*1e3:.2f}ms/step;"
+             f"speedup={row['speedup']:.2f}x")
+        overhead[method] = row
+    out["engine_overhead"] = overhead
     save_json("wallclock", out)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single arch + short engine bench (CI)")
+    a = ap.parse_args()
+    main(steps=a.steps, smoke=a.smoke)

@@ -2,16 +2,22 @@
 steps across 4 simulated datacenters with the full stack — non-IID data pipeline,
 worker-stacked AdamW, CoCoDC protocol engine, consensus evaluation, checkpointing.
 
-By default runs the paper's 150M config at a CPU-tractable sequence length; pass
---full-model to use the exact paper shape (needs a real accelerator for speed).
+By default runs the paper's 150M config at a CPU-tractable sequence length on
+the calibrated symmetric network; pass --full-model to use the exact paper
+shape (needs a real accelerator for speed), or a heterogeneous WAN scenario:
 
     PYTHONPATH=src python examples/train_cross_region.py --steps 300
+    PYTHONPATH=src python examples/train_cross_region.py --topology asym4 \
+        --steps 200          # asymmetric 4-region mesh + per-link stats
+    PYTHONPATH=src python examples/train_cross_region.py \
+        --topology hub_spoke --steps 200   # hierarchical all-reduce via a hub
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
+from repro.core.network import SCENARIOS
 from repro.launch.train import main as train_main
 
 
@@ -19,8 +25,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--method", default="cocodc")
+    ap.add_argument("--topology", default=None, choices=sorted(SCENARIOS),
+                    help="heterogeneous WAN scenario (e.g. asym4 = asymmetric "
+                         "4-region mesh with transpacific bottleneck)")
+    ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"])
+    ap.add_argument("--link-pricing", action="store_true")
     ap.add_argument("--full-model", action="store_true")
     args = ap.parse_args()
+    tag = args.method if args.topology is None else f"{args.method}_{args.topology}"
     argv = [
         "--arch", "paper_150m",
         "--method", args.method,
@@ -29,9 +41,14 @@ def main():
         "--H", "100", "--fragments", "4", "--tau", "5",
         "--local-batch", "4", "--seq-len", "64",
         "--eval-every", "50",
-        "--ckpt", f"checkpoints/{args.method}_paper150m.msgpack",
-        "--history-out", f"experiments/train_{args.method}.json",
+        "--engine-impl", args.engine_impl,
+        "--ckpt", f"checkpoints/{tag}_paper150m.msgpack",
+        "--history-out", f"experiments/train_{tag}.json",
     ]
+    if args.topology:
+        argv.extend(["--topology", args.topology])
+    if args.link_pricing:
+        argv.append("--link-pricing")
     if not args.full_model:
         argv.append("--reduced")
         argv.extend(["--lr", "3e-3"])

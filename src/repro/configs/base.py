@@ -158,3 +158,7 @@ class CoCoDCConfig:
     # all-reduce (beyond-paper): 1.0 = dense. Accounted bytes scale by
     # 2*frac (values + indices).
     sync_topk_frac: float = 1.0
+    # Algorithm-2 link-aware pricing (beyond-paper): rank fragments by
+    # change-rate per WAN-second (R_p / T_s,p) instead of raw R_p, so cheaper
+    # fragments win ties on heterogeneous topologies. Off = literal Eq. 12.
+    link_pricing: bool = False

@@ -1,14 +1,19 @@
 """CoCoDC core: the paper's contribution.
 
-  fragments   — depth-wise model fragmentation (Streaming DiLoCo / CoCoDC)
-  outer_opt   — Nesterov outer optimizer on pseudo-gradients
-  delay_comp  — Algorithm 1 (Taylor-expansion staleness compensation)
-  adaptive    — Algorithm 2 + Eqs. 9-12 (adaptive transmission scheduling)
-  network     — WAN latency/bandwidth + compute-time model
-  protocol    — event-driven engines: DiLoCo / Streaming DiLoCo / CoCoDC
+  fragments    — depth-wise model fragmentation (Streaming DiLoCo / CoCoDC)
+  outer_opt    — Nesterov outer optimizer on pseudo-gradients
+  delay_comp   — Algorithm 1 (Taylor-expansion staleness compensation)
+  adaptive     — Algorithm 2 + Eqs. 9-12 (adaptive transmission scheduling)
+  network      — WAN cost models: symmetric NetworkModel + heterogeneous
+                 per-link Topology (ring/hierarchical collectives, scenarios)
+  engine_state — functional EngineState pytree + pure jitted transitions
+  protocol     — thin host wrapper: simulated wall-clock, channel queueing,
+                 schedule, per-link stats around the EngineState transitions
 """
 from repro.core.adaptive import AdaptiveState, select_fragment, sync_interval, target_syncs  # noqa: F401
 from repro.core.delay_comp import blend, compensate  # noqa: F401
+from repro.core.engine_state import EngineState, init_state, make_engine_fns  # noqa: F401
 from repro.core.fragments import Fragmenter, make_fragmenter  # noqa: F401
-from repro.core.network import NetworkModel, paper_network  # noqa: F401
+from repro.core.network import (NetworkModel, Topology, as_topology,  # noqa: F401
+                                make_scenario, paper_network)
 from repro.core.protocol import ProtocolEngine  # noqa: F401

@@ -51,9 +51,17 @@ def update_rate(state: AdaptiveState, p: int, delta_norm: float, t_complete: int
 
 
 def select_fragment(state: AdaptiveState, t_current: int,
-                    in_flight: Optional[set] = None) -> int:
+                    in_flight: Optional[set] = None,
+                    costs: Optional[List[float]] = None) -> int:
     """Algorithm 2. in_flight fragments are excluded (can't double-send one
-    fragment's all-reduce on the single WAN channel)."""
+    fragment's all-reduce on the single WAN channel).
+
+    `costs` (optional) prices fragments per WAN transfer: costs[p] is the
+    simulated seconds one sync of fragment p occupies the topology's
+    bottleneck links, so the priority becomes change-rate per WAN-second
+    (R_p / cost_p) instead of raw R_p. Under a heterogeneous topology this
+    prefers cheap fragments when rates are comparable; with uniform costs it
+    reduces exactly to Eq. 12."""
     in_flight = in_flight or set()
     candidates = [p for p in range(state.K) if p not in in_flight]
     if not candidates:
@@ -63,6 +71,13 @@ def select_fragment(state: AdaptiveState, t_current: int,
     for p in candidates:
         if t_current - state.last_sync[p] >= state.H:
             return p
-    # Eq. 12: argmax R_p (ties -> lowest index, deterministic)
-    best = max(candidates, key=lambda p: (state.rate[p], -p))
+
+    def priority(p: int) -> float:
+        r = state.rate[p]
+        if costs is None:
+            return r
+        c = max(costs[p], 1e-12)
+        return r / c if math.isfinite(r) else r
+    # Eq. 12: argmax R_p [/ cost_p] (ties -> lowest index, deterministic)
+    best = max(candidates, key=lambda p: (priority(p), -p))
     return best

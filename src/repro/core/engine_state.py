@@ -1,0 +1,261 @@
+"""Functional protocol-engine core: all cross-region coordination state as a
+single JAX pytree (`EngineState`) plus pure transition functions.
+
+The host-side `ProtocolEngine` (core/protocol.py) owns WHEN things happen
+(simulated WAN wall-clock, channel queueing, adaptive schedule); this module
+owns WHAT happens to device state — and each transition is a single
+`jax.jit`-compiled call (specialized per fragment id, buffers donated where the
+backend supports it), so the per-step Python tree-map churn of the old
+mutating engine never touches the device hot path.
+
+State layout (fixed capacity, no Python object queue):
+  * `theta_g`, `momentum`      — global model + outer Nesterov momentum pytrees
+  * `inflight_delta`           — ONE full-model-shaped f32 pytree holding the
+    globally-averaged pseudo-gradients of every in-flight fragment at once
+    (fragments are disjoint, so their rows never collide)
+  * `inflight_snapshot`        — worker-stacked pytree of local fragment state
+    at initiation (CoCoDC Algorithm 1 input; None for other methods)
+  * `inflight_active/t_init`   — (K,) per-fragment in-flight bookkeeping
+  * `delta_norm/last_sync/rate`— (K,) adaptive-transmission state (Eq. 11)
+  * `worker_available`         — (M,) partial-participation mask
+
+Transitions (built by `make_engine_fns`, fragment id `p` is static):
+  * `initiate(state, t, params_stack, p) -> state`
+  * `deliver(state, t, params_stack, p) -> (state, params_stack)`
+  * `diloco_round(state, params_stack) -> (state, params_stack)`
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CoCoDCConfig
+from repro.core import delay_comp as dc_lib
+from repro.core import outer_opt
+from repro.core.fragments import Fragmenter
+
+
+def _is_none(x):
+    return x is None
+
+
+def tree_broadcast_workers(a, m: int):
+    return jax.tree.map(
+        lambda x: None if x is None else jnp.broadcast_to(x[None], (m,) + x.shape),
+        a, is_leaf=_is_none)
+
+
+def tree_norm(a) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(a) if l is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def sparsify(d: jax.Array, frac: float) -> jax.Array:
+    """Top-k magnitude sparsification of one flat-or-shaped leaf."""
+    if frac >= 1.0 or d.size == 0:
+        return d
+    k = max(1, int(d.size * frac))
+    flat = jnp.abs(d.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(d) >= thresh, d, jnp.zeros((), d.dtype))
+
+
+def pseudograd_mean(frag_stack, theta_g_frag, worker_mask, *, sync_dtype,
+                    topk_frac: float = 1.0, barrier: bool = False):
+    """The cross-region collective: mean over AVAILABLE workers of the
+    pseudo-gradients (theta^m - theta^g). Payload crosses the WAN in
+    `sync_dtype` (bf16 compression), optionally top-k-sparsified; accumulation
+    returns to f32. `barrier=True` pins the collective itself to sync_dtype in
+    the lowered multi-pod path (XLA otherwise hoists the f32 upcast ahead of
+    the all-reduce) — used by launch/steps.py."""
+    sync_dt = jnp.dtype(sync_dtype)
+    maskf = jnp.asarray(worker_mask).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(maskf), 1.0)
+
+    def avg(x, g):
+        if x is None:
+            return None
+        d = (x - g[None]).astype(sync_dt)
+        if topk_frac < 1.0:
+            d = jax.vmap(lambda v: sparsify(v, topk_frac))(d)
+        w = maskf.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return jnp.sum(d * w, axis=0) / denom.astype(d.dtype)
+
+    out = jax.tree.map(avg, frag_stack, theta_g_frag, is_leaf=_is_none)
+    if barrier:
+        flat = [d for d in jax.tree.leaves(out, is_leaf=_is_none)
+                if d is not None]
+        if flat:
+            flat = list(jax.lax.optimization_barrier(tuple(flat)))
+            it = iter(flat)
+            out = jax.tree.map(lambda d: None if d is None else next(it), out,
+                               is_leaf=_is_none)
+    return jax.tree.map(lambda d: None if d is None else d.astype(jnp.float32),
+                        out, is_leaf=_is_none)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineState:
+    theta_g: Any
+    momentum: Any
+    inflight_delta: Any
+    inflight_snapshot: Any
+    inflight_active: jax.Array    # (K,) bool
+    inflight_t_init: jax.Array    # (K,) int32
+    delta_norm: jax.Array         # (K,) f32
+    last_sync: jax.Array          # (K,) int32 — t_{p,b} of Eq. 11
+    rate: jax.Array               # (K,) f32  — R_p of Eq. 11 (+inf = never)
+    worker_available: jax.Array   # (M,) bool
+
+
+jax.tree_util.register_dataclass(
+    EngineState,
+    data_fields=[f.name for f in dataclasses.fields(EngineState)],
+    meta_fields=[])
+
+
+def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
+    """Build the initial state from the (identical-per-worker) params stack."""
+    K, M, H = ccfg.num_fragments, ccfg.num_workers, ccfg.local_steps
+    theta_g = jax.tree.map(lambda a: a[0], params_stack)
+    overlapped = method in ("streaming", "cocodc")
+    return EngineState(
+        theta_g=theta_g,
+        momentum=jax.tree.map(jnp.zeros_like, theta_g),
+        # only overlapped methods park payloads in flight; diloco/local would
+        # otherwise carry a dead full-model f32 buffer through every round
+        inflight_delta=(jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
+            if overlapped else None),
+        inflight_snapshot=(jax.tree.map(jnp.zeros_like, params_stack)
+                           if method == "cocodc" else None),
+        inflight_active=jnp.zeros((K,), bool),
+        inflight_t_init=jnp.zeros((K,), jnp.int32),
+        delta_norm=jnp.zeros((K,), jnp.float32),
+        last_sync=jnp.full((K,), -H, jnp.int32),
+        rate=jnp.full((K,), jnp.inf, jnp.float32),
+        worker_available=jnp.ones((M,), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# pure transitions
+# ---------------------------------------------------------------------------
+
+
+class EngineFns(NamedTuple):
+    initiate: Any
+    deliver: Any
+    diloco_round: Any
+
+
+def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
+                    dc_impl: str = "ref", use_jit: bool = True) -> EngineFns:
+    """Build the transition functions. `use_jit=False` executes the identical
+    pure functions eagerly (the legacy host-side path — kept for golden-
+    trajectory parity tests and debugging)."""
+    M = ccfg.num_workers
+
+    def _mask_offline(new_local, old_local, avail):
+        return jax.tree.map(
+            lambda n, o: None if n is None else jnp.where(
+                avail.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_local, old_local, is_leaf=_is_none)
+
+    def initiate(state: EngineState, t, params_stack, p: int) -> EngineState:
+        """Start fragment p's all-reduce at step t: snapshot the worker-local
+        fragment, compute the globally-averaged pseudo-gradient, park both in
+        the fixed-capacity in-flight buffers."""
+        theta_g_frag = frag.extract(state.theta_g, p)
+        frag_stack = frag.extract(params_stack, p, worker_axis=True)
+        delta_avg = pseudograd_mean(
+            frag_stack, theta_g_frag, state.worker_available,
+            sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+        snapshot = state.inflight_snapshot
+        if method == "cocodc":
+            snapshot = frag.insert(snapshot, p, frag_stack, worker_axis=True)
+        return dataclasses.replace(
+            state,
+            inflight_delta=frag.insert(state.inflight_delta, p, delta_avg),
+            inflight_snapshot=snapshot,
+            inflight_active=state.inflight_active.at[p].set(True),
+            inflight_t_init=state.inflight_t_init.at[p].set(t),
+            delta_norm=state.delta_norm.at[p].set(tree_norm(delta_avg)),
+        )
+
+    def deliver(state: EngineState, t, params_stack, p: int):
+        """Fragment p's all-reduce completed at step t: outer Nesterov update
+        of the global fragment, then Streaming-DiLoCo blending (Eq. 3) or
+        CoCoDC delay compensation (Algorithm 1), then the Eq. 11 rate update."""
+        delta_avg = frag.extract(state.inflight_delta, p)
+        theta_g_frag = frag.extract(state.theta_g, p)
+        mom_frag = frag.extract(state.momentum, p)
+        new_g, new_mom = outer_opt.nesterov_update(
+            theta_g_frag, mom_frag, delta_avg,
+            lr=ccfg.outer_lr, mu=ccfg.outer_momentum)
+
+        local_now = frag.extract(params_stack, p, worker_axis=True)
+        g_b = jax.tree.map(lambda g: None if g is None else g[None], new_g,
+                           is_leaf=_is_none)
+        if method == "streaming":
+            new_local = dc_lib.blend(local_now, g_b, alpha=ccfg.mixing_alpha)
+        else:  # cocodc — Algorithm 1 with the ACTUAL overlap depth
+            snap = frag.extract(state.inflight_snapshot, p, worker_axis=True)
+            tau_actual = jnp.maximum(
+                1, t - state.inflight_t_init[p]).astype(jnp.float32)
+            new_local = dc_lib.compensate(
+                local_now, snap, g_b, tau=tau_actual, lam=ccfg.comp_lambda,
+                H=float(ccfg.local_steps), sign=ccfg.eq4_sign, impl=dc_impl)
+        # offline workers keep their local state (they re-sync on return)
+        new_local = _mask_offline(new_local, local_now, state.worker_available)
+
+        interval = jnp.maximum(1, t - state.last_sync[p]).astype(jnp.float32)
+        new_state = dataclasses.replace(
+            state,
+            theta_g=frag.insert(state.theta_g, p, new_g),
+            momentum=frag.insert(state.momentum, p, new_mom),
+            inflight_active=state.inflight_active.at[p].set(False),
+            rate=state.rate.at[p].set(state.delta_norm[p] / interval),
+            last_sync=state.last_sync.at[p].set(
+                jnp.asarray(t, jnp.int32)),
+        )
+        params_stack = frag.insert(params_stack, p, new_local,
+                                   worker_axis=True)
+        return new_state, params_stack
+
+    def diloco_round(state: EngineState, params_stack):
+        """Blocking full-model round: all-reduce pseudo-gradients, outer
+        update, available workers restart from the new theta^g."""
+        delta_avg = pseudograd_mean(
+            params_stack, state.theta_g, state.worker_available,
+            sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+        new_g, new_mom = outer_opt.nesterov_update(
+            state.theta_g, state.momentum, delta_avg,
+            lr=ccfg.outer_lr, mu=ccfg.outer_momentum)
+        reset = tree_broadcast_workers(new_g, M)
+        params_stack = _mask_offline(reset, params_stack,
+                                     state.worker_available)
+        return (dataclasses.replace(state, theta_g=new_g, momentum=new_mom),
+                params_stack)
+
+    if use_jit:
+        # donation elides the state/params copies on accelerators; CPU (tests)
+        # does not implement donation and would warn on every call
+        can_donate = jax.default_backend() != "cpu"
+        initiate = jax.jit(initiate, static_argnames=("p",),
+                           donate_argnums=(0,) if can_donate else ())
+        deliver = jax.jit(deliver, static_argnames=("p",),
+                          donate_argnums=(0, 2) if can_donate else ())
+        diloco_round = jax.jit(
+            diloco_round, donate_argnums=(0, 1) if can_donate else ())
+    return EngineFns(initiate=initiate, deliver=deliver,
+                     diloco_round=diloco_round)

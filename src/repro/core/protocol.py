@@ -1,111 +1,149 @@
 """Event-driven cross-region protocol engines: DiLoCo, Streaming DiLoCo, CoCoDC.
 
-The engine owns the *cross-region* coordination state: the global model theta^g,
-the outer (Nesterov) momentum, the set of in-flight fragment all-reduces, the
-adaptive-transmission scheduler, and the simulated WAN wall-clock. Worker-local
-training (inner AdamW steps) happens outside, on a worker-stacked params pytree
-(leading axis M, sharded over the `pod` mesh axis in the multi-pod deployment).
+The engine is a THIN HOST WRAPPER: all device state (global model theta^g,
+outer Nesterov momentum, the fixed-capacity in-flight fragment buffers, the
+adaptive-transmission rates, the availability mask) lives in a single
+`EngineState` pytree (core/engine_state.py), and every device mutation is one
+pure, jit-compiled transition call. The wrapper owns only host-side scalars:
+the simulated WAN wall-clock, WAN-channel queueing, per-link traffic matrices,
+and the deterministic schedule of WHICH fragment goes WHEN.
 
 Timeline semantics (faithful to the paper):
   * every local step costs T_c;
   * DiLoCo: at t % H == H-1, a BLOCKING full-model all-reduce (wall += T_s_full),
     outer update, and all workers restart from theta^g;
   * Streaming DiLoCo: fragment p's all-reduce is initiated on a fixed round-robin
-    schedule (one fragment every H/K steps) and completes tau steps later; on
-    completion: outer update of the fragment, then Eq. 3 blending;
+    schedule (one fragment every H/K steps); on completion: outer update of the
+    fragment, then Eq. 3 blending;
   * CoCoDC: initiations every h = H/N steps (Eq. 9/10), fragment chosen by
     Algorithm 2; local fragment snapshot taken at initiation; on completion:
     outer update, then Algorithm 1 delay compensation; R_p updated (Eq. 11).
 
-The cross-pod mean over the worker axis is the ONLY cross-region collective; under
-the multi-pod mesh it lowers to an all-reduce over the `pod` axis (verified in the
-dry-run).
+Delivery times are DERIVED, not fixed: a fragment initiated at step t completes
+at the simulated transfer finish time — queueing behind earlier transfers when
+all `Topology.concurrent_collectives` WAN channels are busy, and paced by the
+slowest inter-region link of the collective (ring or hierarchical). Under the
+symmetric paper-calibrated network with a free channel this reduces exactly to
+the paper's `t + tau`.
+
+The cross-pod mean over the worker axis is the ONLY cross-region collective;
+under the multi-pod mesh it lowers to an all-reduce over the `pod` axis
+(verified in the dry-run).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional
+from typing import Dict, List
 
-import jax
+import numpy as np
+
 import jax.numpy as jnp
 
 from repro.configs.base import CoCoDCConfig
 from repro.core import adaptive as adaptive_lib
-from repro.core import delay_comp as dc_lib
-from repro.core import outer_opt
+from repro.core import engine_state as es
 from repro.core.fragments import Fragmenter
-from repro.core.network import NetworkModel
-
-
-def _tree_sub(a, b):
-    return jax.tree.map(lambda x, y: None if x is None else x - y, a, b,
-                        is_leaf=lambda x: x is None)
-
-
-def _tree_worker_mean(a):
-    return jax.tree.map(lambda x: None if x is None else jnp.mean(x, axis=0), a,
-                        is_leaf=lambda x: x is None)
-
-
-def _tree_broadcast_workers(a, m):
-    return jax.tree.map(
-        lambda x: None if x is None else jnp.broadcast_to(x[None], (m,) + x.shape),
-        a, is_leaf=lambda x: x is None)
-
-
-def _tree_norm(a) -> jax.Array:
-    leaves = [l for l in jax.tree.leaves(a) if l is not None]
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+from repro.core.network import Topology, as_topology
 
 
 @dataclasses.dataclass
-class InFlight:
+class PendingSync:
+    """Host-side mirror of one in-flight fragment transfer (scheduling only —
+    the payload lives in EngineState.inflight_*)."""
     frag: int
     t_init: int
-    deliver_at: int
-    delta_avg: Any            # globally-averaged pseudo-gradient (the all-reduce)
-    snapshot: Any             # worker-stacked local fragment at t_init (CoCoDC)
-    delta_norm: jax.Array
+    deliver_at: int        # step index at which the delivery lands
+    finish_time: float     # simulated transfer completion (wall seconds)
+    seq: int               # initiation order (stable delivery tie-break)
 
 
 class ProtocolEngine:
-    """One engine instance per training run. Methods mutate engine state and
-    return the (possibly updated) worker-stacked params."""
+    """One engine instance per training run. Device state is functional
+    (`self.state`); host methods schedule transitions and account wall-clock."""
 
     def __init__(self, method: str, ccfg: CoCoDCConfig, fragmenter: Fragmenter,
-                 network: NetworkModel, params_stack, *, dc_impl: str = "ref"):
+                 network, params_stack, *, dc_impl: str = "ref",
+                 engine_impl: str = "jit"):
         assert method in ("diloco", "streaming", "cocodc", "local")
+        assert engine_impl in ("jit", "host")
         self.method = method
         self.cfg = ccfg
         self.frag = fragmenter
-        self.net = network
+        self.topology: Topology = as_topology(network)
+        self.net = self.topology          # cost-model view (t_c / t_s)
         self.dc_impl = dc_impl
+        self.engine_impl = engine_impl
         self.M = ccfg.num_workers
         self.K = ccfg.num_fragments
         self.H = ccfg.local_steps
         self.tau = ccfg.overlap_depth
-        # global model starts at the (identical) worker init
-        self.theta_g = jax.tree.map(lambda a: a[0], params_stack)
-        self.momentum = jax.tree.map(jnp.zeros_like, self.theta_g)
-        self.in_flight: List[InFlight] = []
-        self.adaptive = adaptive_lib.AdaptiveState(K=self.K, H=self.H)
+
+        self.state = es.init_state(method, ccfg, params_stack)
+        self._fns = es.make_engine_fns(method, ccfg, fragmenter,
+                                       dc_impl=dc_impl,
+                                       use_jit=(engine_impl == "jit"))
+
         # Eq. 9/10 scheduling interval
         mean_frag_bytes = self.frag.total_bytes / self.K
-        t_s = network.t_s(int(mean_frag_bytes))
-        self.N = adaptive_lib.target_syncs(self.K, self.H, network.t_c, t_s,
-                                           ccfg.net_utilization)
+        t_s = self.topology.t_s(int(mean_frag_bytes))
+        self.N = adaptive_lib.target_syncs(self.K, self.H, self.topology.t_c,
+                                           t_s, ccfg.net_utilization)
         self.h_cocodc = adaptive_lib.sync_interval(self.H, self.N)
         self.h_stream = max(1, self.H // self.K)
+        # per-fragment WAN price (seconds per sync) for Algorithm 2 link-aware
+        # pricing — heterogeneous fragments/links make some syncs cheaper
+        self._frag_cost = [
+            self.topology.t_s(self._wire_bytes(self.frag.fragment_bytes(p)))
+            for p in range(self.K)]
         # partial participation (straggler tolerance, beyond-paper): offline
         # workers neither contribute to nor receive fragment syncs
         self.worker_available = [True] * self.M
-        # stats
+
+        # host-side schedule + stats
+        self.pending: List[PendingSync] = []
+        self._seq = 0
         self.wall_clock = 0.0
         self.comm_seconds = 0.0
         self.bytes_sent = 0
         self.n_syncs = 0
-        self._channel_free_at = 0.0
+        self._channel_free = [0.0] * max(1, self.topology.concurrent_collectives)
+        m = self.M
+        self.link_bytes = np.zeros((m, m), dtype=np.float64)
+        self.link_seconds = np.zeros((m, m), dtype=np.float64)
+
+    # ------------------------------------------------------------ properties
+
+    @property
+    def theta_g(self):
+        return self.state.theta_g
+
+    @theta_g.setter
+    def theta_g(self, value):
+        self.state = dataclasses.replace(self.state, theta_g=value)
+
+    @property
+    def momentum(self):
+        return self.state.momentum
+
+    @momentum.setter
+    def momentum(self, value):
+        self.state = dataclasses.replace(self.state, momentum=value)
+
+    @property
+    def in_flight(self) -> List[PendingSync]:
+        """Back-compat view of the in-flight schedule (initiation order)."""
+        return list(self.pending)
+
+    @property
+    def adaptive(self) -> adaptive_lib.AdaptiveState:
+        """Host snapshot of the Eq. 11 scheduler state (reads device arrays)."""
+        rate = np.asarray(self.state.rate)
+        last = np.asarray(self.state.last_sync)
+        return adaptive_lib.AdaptiveState(
+            K=self.K, H=self.H,
+            last_sync=[int(x) for x in last],
+            rate=[float(r) for r in rate])
 
     # ------------------------------------------------------------------ utils
 
@@ -113,144 +151,101 @@ class ProtocolEngine:
         """Mark a datacenter online/offline (WAN partition / maintenance).
         Offline workers are excluded from subsequent syncs until restored."""
         self.worker_available[worker] = available
+        self.state = dataclasses.replace(
+            self.state,
+            worker_available=self.state.worker_available.at[worker].set(
+                bool(available)))
 
     def _sparsify(self, d):
         """Top-k magnitude sparsification per leaf (sync_topk_frac < 1)."""
-        frac = self.cfg.sync_topk_frac
-        if frac >= 1.0 or d.size == 0:
-            return d
-        k = max(1, int(d.size * frac))
-        flat = jnp.abs(d.reshape(-1))
-        thresh = jax.lax.top_k(flat, k)[0][-1]
-        return jnp.where(jnp.abs(d) >= thresh, d, jnp.zeros((), d.dtype))
+        return es.sparsify(d, self.cfg.sync_topk_frac)
 
-    def _allreduce(self, frag_stack, theta_g_frag):
-        """The cross-region collective: mean over the AVAILABLE workers of the
-        pseudo-gradients. Under the multi-pod mesh this is the pod all-reduce.
-        Payload crosses the WAN in cfg.sync_dtype (bf16 compression is a
-        beyond-paper option), optionally top-k-sparsified; accumulation
-        returns to f32."""
-        sync_dt = jnp.dtype(self.cfg.sync_dtype)
-        mask = jnp.asarray(self.worker_available, jnp.float32)
-        denom = jnp.maximum(jnp.sum(mask), 1.0)
-
-        def avg(x, g):
-            if x is None:
-                return None
-            d = (x - g[None]).astype(sync_dt)
-            if self.cfg.sync_topk_frac < 1.0:
-                d = jax.vmap(self._sparsify)(d)
-            w = mask.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
-            return (jnp.sum(d * w, axis=0) / denom.astype(d.dtype)
-                    ).astype(jnp.float32)
-
-        return jax.tree.map(avg, frag_stack, theta_g_frag,
-                            is_leaf=lambda x: x is None)
-
-    def _account_transfer(self, nbytes: int):
+    def _wire_bytes(self, nbytes: int) -> int:
+        """Bytes that actually cross the WAN for an `nbytes` f32 fragment:
+        sync_dtype compression and top-k sparsification (values + indices).
+        ONE accounting rule for blocking and overlapped paths alike."""
         if jnp.dtype(self.cfg.sync_dtype).itemsize < 4:
             nbytes = nbytes * jnp.dtype(self.cfg.sync_dtype).itemsize // 4
         if self.cfg.sync_topk_frac < 1.0:
             # sparse wire format: values + indices
             nbytes = int(nbytes * min(1.0, 2 * self.cfg.sync_topk_frac))
-        t_s = self.net.t_s(nbytes)
-        start = max(self.wall_clock, self._channel_free_at)
-        self._channel_free_at = start + t_s
+        return int(nbytes)
+
+    def _schedule_transfer(self, nbytes: int) -> float:
+        """Queue one collective of `nbytes` (raw f32) on the WAN: applies the
+        wire format, grabs the earliest-free channel, accounts per-link
+        traffic. Returns the simulated completion wall-time."""
+        wire = self._wire_bytes(nbytes)
+        t_s = self.topology.t_s(wire)
+        ch = min(range(len(self._channel_free)),
+                 key=lambda i: self._channel_free[i])
+        start = max(self.wall_clock, self._channel_free[ch])
+        finish = start + t_s
+        self._channel_free[ch] = finish
         self.comm_seconds += t_s
-        self.bytes_sent += nbytes
+        self.bytes_sent += wire
         self.n_syncs += 1
+        self.link_bytes += self.topology.link_bytes(wire)
+        self.link_seconds += self.topology.link_seconds(wire)
+        return finish
+
+    def _deliver_step_for(self, t: int, finish_time: float) -> int:
+        """First step whose end-of-step wall-clock covers `finish_time`
+        (overlapped methods never block, so wall(t') = (t'+1) * T_c)."""
+        t_c = self.topology.t_c
+        if t_c <= 0:
+            return t + 1
+        return max(t + 1, math.ceil(finish_time / t_c - 1e-9) - 1)
 
     # ------------------------------------------------------------ initiation
 
     def _initiate(self, t: int, params_stack, p: int):
-        theta_g_frag = self.frag.extract(self.theta_g, p)
-        frag_stack = self.frag.extract(params_stack, p, worker_axis=True)
-        delta_avg = self._allreduce(frag_stack, theta_g_frag)
-        self.in_flight.append(InFlight(
-            frag=p, t_init=t, deliver_at=t + self.tau, delta_avg=delta_avg,
-            snapshot=frag_stack if self.method == "cocodc" else None,
-            delta_norm=_tree_norm(delta_avg)))
-        self._account_transfer(self.frag.fragment_bytes(p))
+        finish = self._schedule_transfer(self.frag.fragment_bytes(p))
+        self.state = self._fns.initiate(self.state, t, params_stack, p)
+        self.pending.append(PendingSync(
+            frag=p, t_init=t, deliver_at=self._deliver_step_for(t, finish),
+            finish_time=finish, seq=self._seq))
+        self._seq += 1
 
-    # -------------------------------------------------------------- delivery
-
-    def _deliver(self, t: int, params_stack, ev: InFlight):
-        p = ev.frag
-        theta_g_frag = self.frag.extract(self.theta_g, p)
-        mom_frag = self.frag.extract(self.momentum, p)
-        new_g, new_mom = outer_opt.nesterov_update(
-            theta_g_frag, mom_frag, ev.delta_avg,
-            lr=self.cfg.outer_lr, mu=self.cfg.outer_momentum)
-        self.theta_g = self.frag.insert(self.theta_g, p, new_g)
-        self.momentum = self.frag.insert(self.momentum, p, new_mom)
-
-        local_now = self.frag.extract(params_stack, p, worker_axis=True)
-        avail = jnp.asarray(self.worker_available, bool)
-        if self.method == "streaming":
-            new_local = dc_lib.blend(
-                local_now,
-                jax.tree.map(lambda g: None if g is None else g[None], new_g,
-                             is_leaf=lambda x: x is None),
-                alpha=self.cfg.mixing_alpha)
-        else:  # cocodc — Algorithm 1
-            tau_actual = max(1, t - ev.t_init)
-            new_local = dc_lib.compensate(
-                local_now, ev.snapshot,
-                jax.tree.map(lambda g: None if g is None else g[None], new_g,
-                             is_leaf=lambda x: x is None),
-                tau=float(tau_actual), lam=self.cfg.comp_lambda, H=float(self.H),
-                sign=self.cfg.eq4_sign, impl=self.dc_impl)
-        if not all(self.worker_available):
-            # offline workers keep their local state (they re-sync on return)
-            new_local = jax.tree.map(
-                lambda n, o: None if n is None else jnp.where(
-                    avail.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
-                new_local, local_now, is_leaf=lambda x: x is None)
-        params_stack = self.frag.insert(params_stack, p, new_local,
-                                        worker_axis=True)
-        # Eq. 11 metric update (identical on all workers: uses the shared delta)
-        adaptive_lib.update_rate(self.adaptive, p, float(ev.delta_norm), t)
-        return params_stack
+    def _select_cocodc(self, t: int, busy: set) -> int:
+        costs = self._frag_cost if self.cfg.link_pricing else None
+        return adaptive_lib.select_fragment(self.adaptive, t, busy, costs=costs)
 
     # ------------------------------------------------------------- main hook
 
     def on_step_end(self, t: int, params_stack):
         """Call after inner step t (0-based). Returns updated params_stack."""
-        self.wall_clock += self.net.t_c
+        self.wall_clock += self.topology.t_c
         if self.method == "local":
             return params_stack
 
         if self.method == "diloco":
             if (t + 1) % self.H == 0:
-                delta_avg = self._allreduce(params_stack, self.theta_g)
-                self.theta_g, self.momentum = outer_opt.nesterov_update(
-                    self.theta_g, self.momentum, delta_avg,
-                    lr=self.cfg.outer_lr, mu=self.cfg.outer_momentum)
-                t_s = self.net.t_s(self.frag.total_bytes)
-                self.wall_clock += t_s       # BLOCKING
-                self.comm_seconds += t_s
-                self.bytes_sent += self.frag.total_bytes
-                self.n_syncs += 1
-                params_stack = _tree_broadcast_workers(self.theta_g, self.M)
+                finish = self._schedule_transfer(self.frag.total_bytes)
+                self.wall_clock = max(self.wall_clock, finish)   # BLOCKING
+                self.state, params_stack = self._fns.diloco_round(
+                    self.state, params_stack)
             return params_stack
 
         # --- overlapped methods: deliveries due at this step ---------------
-        due = [ev for ev in self.in_flight if ev.deliver_at <= t]
-        for ev in sorted(due, key=lambda e: e.deliver_at):
-            params_stack = self._deliver(t, params_stack, ev)
-            self.in_flight.remove(ev)
+        due = sorted((ev for ev in self.pending if ev.deliver_at <= t),
+                     key=lambda e: (e.deliver_at, e.seq))
+        for ev in due:
+            self.state, params_stack = self._fns.deliver(
+                self.state, t, params_stack, ev.frag)
+            self.pending.remove(ev)
 
         # --- initiations ----------------------------------------------------
         if self.method == "streaming":
             if t % self.h_stream == 0:
                 p = (t // self.h_stream) % self.K
-                if all(ev.frag != p for ev in self.in_flight):
+                if all(ev.frag != p for ev in self.pending):
                     self._initiate(t, params_stack, p)
         else:  # cocodc
             if t % self.h_cocodc == 0:
-                busy = {ev.frag for ev in self.in_flight}
+                busy = {ev.frag for ev in self.pending}
                 if len(busy) < self.K:
-                    p = adaptive_lib.select_fragment(self.adaptive, t, busy)
+                    p = self._select_cocodc(t, busy)
                     self._initiate(t, params_stack, p)
         return params_stack
 
@@ -265,4 +260,25 @@ class ProtocolEngine:
             "overlap_ratio": (0.0 if self.wall_clock == 0 else
                               min(1.0, self.comm_seconds / self.wall_clock)),
             "target_syncs_N": float(self.N),
+            "busiest_link_bytes": float(self.link_bytes.max(initial=0.0)),
+            "busiest_link_seconds": float(self.link_seconds.max(initial=0.0)),
         }
+
+    def link_stats(self) -> Dict[str, object]:
+        """Per-link transfer accounting over the run (region-name keyed)."""
+        regions = self.topology.regions
+        links = {}
+        m = self.M
+        for i in range(m):
+            for j in range(m):
+                if self.link_bytes[i, j] > 0:
+                    links[f"{regions[i]}->{regions[j]}"] = {
+                        "bytes": float(self.link_bytes[i, j]),
+                        "busy_seconds": float(self.link_seconds[i, j]),
+                    }
+        busiest = None
+        if links:
+            busiest = max(links, key=lambda k: links[k]["busy_seconds"])
+        return {"links": links, "busiest_link": busiest,
+                "collective": self.topology.collective,
+                "regions": list(regions)}

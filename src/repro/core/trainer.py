@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import CoCoDCConfig, ModelConfig
 from repro.core.fragments import make_fragmenter
-from repro.core.network import NetworkModel, paper_network
+from repro.core.network import NetworkModel, Topology, paper_network
 from repro.core.protocol import ProtocolEngine
 from repro.data.pipeline import MarkovCorpus, make_worker_streams, stacked_batch
 from repro.models import api
@@ -38,11 +38,16 @@ class TrainerConfig:
     eval_batch: int = 16
     seed: int = 0
     noniid_frac: float = 0.25
+    # "jit" = functional EngineState transitions under jax.jit (hot path);
+    # "host" = same pure functions executed eagerly (legacy-equivalent path,
+    # kept for golden-trajectory parity tests and debugging)
+    engine_impl: str = "jit"
 
 
 class CrossRegionTrainer:
     def __init__(self, model_cfg: ModelConfig, ccfg: CoCoDCConfig,
-                 tcfg: TrainerConfig, network: Optional[NetworkModel] = None):
+                 tcfg: TrainerConfig,
+                 network: Optional["NetworkModel | Topology"] = None):
         self.mcfg = model_cfg
         self.ccfg = ccfg
         self.tcfg = tcfg
@@ -63,7 +68,8 @@ class CrossRegionTrainer:
                 tau=ccfg.overlap_depth)
         self.network = network
         self.engine = ProtocolEngine(tcfg.method, ccfg, self.fragmenter, network,
-                                     self.params_stack)
+                                     self.params_stack,
+                                     engine_impl=tcfg.engine_impl)
 
         self.streams = make_worker_streams(M, model_cfg.vocab, seed=tcfg.seed,
                                            noniid_frac=tcfg.noniid_frac)

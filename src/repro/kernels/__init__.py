@@ -12,4 +12,13 @@ Kernels:
   rwkv6_scan      — chunked RWKV-6 WKV recurrence (matrix-valued head state)
   rms_norm        — fused RMSNorm (one HBM pass)
   flash_decode    — one-token GQA attention over ring-buffer KV caches (serving)
+
+`tpu_compiler_params` papers over the Pallas API rename: the TPU compiler-params
+class is `pltpu.TPUCompilerParams` up to jax 0.4.x and `pltpu.CompilerParams`
+from jax 0.5+. Kernels import the alias instead of naming either directly.
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+# version-compatible alias (TPUCompilerParams was renamed to CompilerParams)
+tpu_compiler_params = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams")

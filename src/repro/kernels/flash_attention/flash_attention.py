@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
@@ -29,6 +31,9 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             bq, bk, sk, causal, window, scale):
+    # refs arrive squeezed to (S, hd) via None block dims, so every access is
+    # a single NDIndexer (interpret-mode discharge supports exactly one
+    # indexer per load/store in this jax version)
     qi = pl.program_id(2)
     q = q_ref[...].astype(jnp.float32) * scale                 # (BQ, hd)
 
@@ -95,18 +100,16 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=None,
     bk = min(bk, Sk)
     grid = (B, H, Sq // bq)
 
-    q_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0))
-    kv_spec = pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h // group, 0, 0))
+    # None block dims squeeze batch/head away inside the kernel
+    q_spec = pl.BlockSpec((None, None, bq, hd), lambda b, h, i: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((None, None, Sk, hd),
+                           lambda b, h, i: (b, h // group, 0, 0))
 
     kernel = functools.partial(_kernel, bq=bq, bk=bk, sk=Sk, causal=causal,
                                window=window, scale=scale)
 
-    def squeeze_kernel(q_ref, k_ref, v_ref, o_ref, m, l, acc):
-        kernel(q_ref.at[0, 0], k_ref.at[0, 0], v_ref.at[0, 0], o_ref.at[0, 0],
-               m, l, acc)
-
     return pl.pallas_call(
-        squeeze_kernel,
+        kernel,
         grid=grid,
         in_specs=[q_spec, kv_spec, kv_spec],
         out_specs=q_spec,
@@ -116,7 +119,7 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=None,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
         name="flash_attention_gqa",

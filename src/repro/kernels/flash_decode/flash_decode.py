@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 BLOCK_C = 512
 NEG_INF = -1e30
 
@@ -94,7 +96,7 @@ def flash_decode_bkv(q, k_cache, v_cache, kv_positions, q_position, *,
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_decode_gqa",

@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import CoCoDCConfig, InputShape, ModelConfig
 from repro.core import delay_comp as dc_lib
+from repro.core import engine_state as es
 from repro.core import outer_opt
 from repro.launch import sharding as shd
 from repro.models import api
@@ -135,37 +136,19 @@ def make_sync_step(cfg: ModelConfig, ccfg: CoCoDCConfig, fragmenter, frag_id: in
       theta^m = DelayComp(theta^m_now, theta^m_snap, theta^g)   (Algorithm 1)
     params_snapshot is the t_p worker-local fragment state."""
 
-    sync_dt = jnp.dtype(ccfg.sync_dtype)
-
     def sync_step(params_stack, params_snapshot_frag, theta_g, momentum):
         frag_now = fragmenter.extract(params_stack, frag_id, worker_axis=True)
         g_frag = fragmenter.extract(theta_g, frag_id)
         m_frag = fragmenter.extract(momentum, frag_id)
         # pseudo-gradients cross the WAN in ccfg.sync_dtype (bf16 halves the
-        # cross-region payload); accumulation back in f32
-        deltas = jax.tree.map(
-            lambda x, g: None if x is None
-            else (x - g[None]).astype(sync_dt), frag_now, g_frag,
-            is_leaf=lambda x: x is None)
-        m = ccfg.num_workers
-        delta_avg = jax.tree.map(
-            lambda d: None if d is None
-            else jnp.sum(d, axis=0, dtype=sync_dt) / jnp.asarray(m, sync_dt),
-            deltas, is_leaf=lambda x: x is None)
-        if sync_dt != jnp.float32:
-            # keep the collective itself in sync_dt: without a barrier XLA
-            # hoists the f32 upcast ahead of the all-reduce (convert-of-sum ==
-            # sum-of-converts) and the wire format silently stays f32
-            flat = [d for d in jax.tree.leaves(
-                delta_avg, is_leaf=lambda x: x is None) if d is not None]
-            flat = list(jax.lax.optimization_barrier(tuple(flat)))
-            it = iter(flat)
-            delta_avg = jax.tree.map(
-                lambda d: None if d is None else next(it), delta_avg,
-                is_leaf=lambda x: x is None)
-        delta_avg = jax.tree.map(
-            lambda d: None if d is None else d.astype(jnp.float32), delta_avg,
-            is_leaf=lambda x: x is None)
+        # cross-region payload); accumulation back in f32. barrier=True keeps
+        # the collective itself in sync_dt: without it XLA hoists the f32
+        # upcast ahead of the all-reduce (convert-of-sum == sum-of-converts)
+        # and the wire format silently stays f32.
+        delta_avg = es.pseudograd_mean(
+            frag_now, g_frag, jnp.ones((ccfg.num_workers,), jnp.float32),
+            sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac,
+            barrier=jnp.dtype(ccfg.sync_dtype) != jnp.float32)
         new_g, new_m = outer_opt.nesterov_update(
             g_frag, m_frag, delta_avg, lr=ccfg.outer_lr, mu=ccfg.outer_momentum)
         compensated = dc_lib.compensate(

@@ -18,6 +18,7 @@ import time
 
 from repro.checkpoint import save_pytree
 from repro.configs import CoCoDCConfig, get_config
+from repro.core.network import SCENARIOS, make_scenario
 from repro.core.trainer import CrossRegionTrainer, TrainerConfig
 
 
@@ -29,12 +30,19 @@ def build(args):
         num_workers=args.workers, local_steps=args.H,
         num_fragments=args.fragments, overlap_depth=args.tau,
         comp_lambda=args.comp_lambda, net_utilization=args.gamma,
-        mixing_alpha=args.alpha)
+        mixing_alpha=args.alpha, link_pricing=args.link_pricing)
     tcfg = TrainerConfig(
         method=args.method, local_batch=args.local_batch, seq_len=args.seq_len,
         total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
-        seed=args.seed, inner_lr=args.lr)
-    return CrossRegionTrainer(mcfg, ccfg, tcfg)
+        seed=args.seed, inner_lr=args.lr, engine_impl=args.engine_impl)
+    network = None
+    if args.topology is not None:
+        # "paper" keeps the calibrated-symmetric default (network=None) so the
+        # fragment-size calibration in CrossRegionTrainer still applies
+        if args.topology != "paper":
+            network = make_scenario(args.topology, num_workers=args.workers,
+                                    step_time_s=args.step_time)
+    return CrossRegionTrainer(mcfg, ccfg, tcfg, network=network)
 
 
 def main(argv=None):
@@ -57,6 +65,15 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
+    ap.add_argument("--topology", default=None, choices=sorted(SCENARIOS),
+                    help="heterogeneous WAN scenario (default: calibrated "
+                         "symmetric paper network)")
+    ap.add_argument("--step-time", type=float, default=1.0,
+                    help="T_c seconds per local step for --topology scenarios")
+    ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"],
+                    help="jitted EngineState transitions vs eager host path")
+    ap.add_argument("--link-pricing", action="store_true",
+                    help="Algorithm-2 link-aware fragment pricing (R_p/T_s,p)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default=None,
                     help="checkpoint to restore theta_g/momentum from")
@@ -86,8 +103,15 @@ def main(argv=None):
                        log=lambda s: print(s, flush=True))
     dt = time.time() - t0
     stats = trainer.engine.stats()
+    link_stats = trainer.engine.link_stats()
     print(f"done in {dt:.1f}s host-time; simulated wall {stats['wall_clock_s']:.0f}s;"
           f" comm hidden {stats['overlap_ratio']*100:.0f}%", flush=True)
+    if link_stats["links"]:
+        print("per-link WAN traffic:", flush=True)
+        for link, rec in sorted(link_stats["links"].items()):
+            print(f"  {link:32s} {rec['bytes']/1e9:9.3f} GB "
+                  f"busy {rec['busy_seconds']:8.1f}s", flush=True)
+        print(f"  busiest link: {link_stats['busiest_link']}", flush=True)
     if args.ckpt:
         save_pytree(args.ckpt, {
             "theta_g": trainer.engine.theta_g,
@@ -102,8 +126,8 @@ def main(argv=None):
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)
         with open(args.history_out, "w") as f:
-            json.dump({"args": vars(args), "history": hist, "stats": stats}, f,
-                      indent=1)
+            json.dump({"args": vars(args), "history": hist, "stats": stats,
+                       "link_stats": link_stats}, f, indent=1)
         print(f"history -> {args.history_out}")
     return 0
 

@@ -1,6 +1,9 @@
 """Adaptive transmission (Algorithm 2, Eqs. 9-12) properties."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.adaptive import (AdaptiveState, select_fragment, sync_interval,

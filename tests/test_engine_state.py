@@ -1,0 +1,320 @@
+"""Functional-engine refactor tests: EngineState pytree mechanics, golden-
+trajectory parity between the jitted EngineState path and the eager host path,
+contention-aware delivery, heterogeneous Topology cost models, per-link stats."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import CoCoDCConfig, ModelConfig
+from repro.core import engine_state as es
+from repro.core.fragments import make_fragmenter
+from repro.core.network import (NetworkModel, Topology, as_topology,
+                                four_region_asymmetric, hub_and_spoke,
+                                make_scenario, paper_network)
+from repro.core.protocol import ProtocolEngine
+from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+from repro.models import api
+
+KEY = jax.random.PRNGKey(0)
+
+TINY = ModelConfig(name="es-tiny", family="dense", n_layers=4, d_model=64,
+                   n_heads=2, n_kv_heads=1, d_ff=128, vocab=128,
+                   compute_dtype="float32")
+
+
+def make_stack(M=2, cfg=TINY):
+    params = api.init_params(cfg, KEY)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (M,) + a.shape).copy(), params)
+
+
+def engine_for(method, M=2, H=10, K=2, tau=2, network=None,
+               engine_impl="jit", **ccfg_kw):
+    ccfg = CoCoDCConfig(num_workers=M, local_steps=H, num_fragments=K,
+                        overlap_depth=tau, **ccfg_kw)
+    stack = make_stack(M)
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+    frag = make_fragmenter(TINY, shape, K)
+    if network is None:
+        network = paper_network(M, fragment_bytes=frag.total_bytes // K,
+                                tau=tau)
+    eng = ProtocolEngine(method, ccfg, frag, network, stack,
+                         engine_impl=engine_impl)
+    return eng, stack
+
+
+def perturb(stack, scale=0.01):
+    leaves, treedef = jax.tree.flatten(stack)
+    out = []
+    for i, l in enumerate(leaves):
+        noise = jax.random.normal(jax.random.fold_in(KEY, 100 + i),
+                                  l.shape) * scale
+        out.append(l + noise.astype(l.dtype))
+    return treedef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# EngineState pytree mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_engine_state_is_pytree():
+    eng, _ = engine_for("cocodc")
+    leaves, treedef = jax.tree.flatten(eng.state)
+    assert all(hasattr(l, "shape") for l in leaves)
+    rt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rt, es.EngineState)
+    # jit-transparent: a jitted identity-ish function accepts the state whole
+    bumped = jax.jit(lambda s: dataclasses.replace(
+        s, delta_norm=s.delta_norm + 1))(eng.state)
+    np.testing.assert_allclose(np.asarray(bumped.delta_norm),
+                               np.asarray(eng.state.delta_norm) + 1)
+
+
+def test_engine_state_fixed_capacity_inflight():
+    """In-flight payloads live in fixed-capacity stacked buffers, one slot per
+    fragment; initiating marks the slot active, delivery clears it."""
+    eng, stack = engine_for("cocodc", H=10, K=2, tau=2)
+    stack = perturb(stack)
+    assert not bool(np.any(np.asarray(eng.state.inflight_active)))
+    stack = eng.on_step_end(0, stack)        # initiation at t=0
+    active = np.asarray(eng.state.inflight_active)
+    assert active.sum() == 1
+    p = int(np.argmax(active))
+    assert eng.in_flight[0].frag == p
+    for t in range(1, 4):
+        stack = eng.on_step_end(t, stack)    # delivery by t approx tau
+    assert not np.asarray(eng.state.inflight_active)[p] or eng.n_syncs >= 1
+
+
+def test_availability_mask_lives_in_state():
+    eng, _ = engine_for("cocodc", M=2)
+    eng.set_worker_availability(1, False)
+    np.testing.assert_array_equal(np.asarray(eng.state.worker_available),
+                                  [True, False])
+    eng.set_worker_availability(1, True)
+    np.testing.assert_array_equal(np.asarray(eng.state.worker_available),
+                                  [True, True])
+
+
+# ---------------------------------------------------------------------------
+# golden-trajectory parity: jitted EngineState path == eager host path
+# ---------------------------------------------------------------------------
+
+
+def _golden_trainer(method, engine_impl, steps):
+    mcfg = dataclasses.replace(get_config("paper_150m").reduced(),
+                               compute_dtype="float32")
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=8, num_fragments=2,
+                        overlap_depth=2)
+    tcfg = TrainerConfig(method=method, local_batch=2, seq_len=16,
+                         total_steps=steps, warmup_steps=4, inner_lr=3e-3,
+                         eval_batch=4, engine_impl=engine_impl)
+    tr = CrossRegionTrainer(mcfg, ccfg, tcfg)
+    tr.run(eval_every=8, log=lambda s: None)
+    return tr
+
+
+@pytest.mark.parametrize("method", ["diloco", "streaming", "cocodc"])
+def test_golden_trajectory_jit_matches_host(method):
+    """The jitted EngineState engine reproduces the eager (legacy host-side)
+    engine step-for-step on the paper_150m config at toy scale: identical
+    sync/bytes accounting, eval-NLL trace within 1e-5."""
+    steps = 24
+    tr_host = _golden_trainer(method, "host", steps)
+    tr_jit = _golden_trainer(method, "jit", steps)
+
+    s_host, s_jit = tr_host.engine.stats(), tr_jit.engine.stats()
+    for k in ("bytes_sent", "n_syncs", "wall_clock_s", "comm_seconds",
+              "target_syncs_N", "busiest_link_bytes"):
+        assert s_host[k] == s_jit[k], f"stats[{k}] diverged: " \
+                                      f"{s_host[k]} vs {s_jit[k]}"
+
+    nll_host = [rec["nll"] for rec in tr_host.history]
+    nll_jit = [rec["nll"] for rec in tr_jit.history]
+    assert len(nll_host) == len(nll_jit) > 0
+    np.testing.assert_allclose(nll_host, nll_jit, atol=1e-5)
+
+    # consensus models agree leaf-for-leaf (jit-vs-eager fusion reorders f32
+    # arithmetic, so allow the accumulated per-leaf drift a looser tolerance
+    # than the observable NLL trace)
+    for a, b in zip(jax.tree.leaves(tr_host.engine.theta_g),
+                    jax.tree.leaves(tr_jit.engine.theta_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# contention-aware delivery (the old fixed `t + tau` bug)
+# ---------------------------------------------------------------------------
+
+
+def test_contention_delays_delivery():
+    """Back-to-back initiations on one WAN channel queue: the second fragment's
+    effective overlap depth exceeds the first's by the queueing delay."""
+    # t_s = 5 * t_c on a single channel; initiations at t=0 and t=1 (H=2,K=2
+    # -> round-robin every step)
+    stack = make_stack(2)
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+    frag = make_fragmenter(TINY, shape, 2)
+    fb = frag.total_bytes // 2
+    net = as_topology(paper_network(2, fragment_bytes=fb, tau=5))
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=2, num_fragments=2,
+                        overlap_depth=5)
+    eng = ProtocolEngine("streaming", ccfg, frag, net, stack)
+    s = perturb(stack)
+    s = eng.on_step_end(0, s)
+    s = eng.on_step_end(1, s)
+    evs = sorted(eng.in_flight, key=lambda e: e.t_init)
+    assert len(evs) == 2
+    depth0 = evs[0].deliver_at - evs[0].t_init
+    depth1 = evs[1].deliver_at - evs[1].t_init
+    assert depth1 > depth0, (depth0, depth1)
+    # the queue shifts delivery by the channel-busy time, not just one step
+    assert evs[1].finish_time > evs[0].finish_time
+
+
+def test_concurrent_channels_remove_queueing():
+    """Same schedule with 2 concurrent WAN channels: the second fragment no
+    longer queues behind the first."""
+    def second_depth(channels):
+        stack = make_stack(2)
+        shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+        frag = make_fragmenter(TINY, shape, 2)
+        fb = frag.total_bytes // 2
+        base = as_topology(paper_network(2, fragment_bytes=fb, tau=5))
+        net = dataclasses.replace(base, concurrent_collectives=channels)
+        ccfg = CoCoDCConfig(num_workers=2, local_steps=2, num_fragments=2,
+                            overlap_depth=5)
+        eng = ProtocolEngine("streaming", ccfg, frag, net, stack)
+        s = perturb(stack)
+        s = eng.on_step_end(0, s)
+        s = eng.on_step_end(1, s)
+        ev = sorted(eng.in_flight, key=lambda e: e.t_init)[1]
+        return ev.deliver_at - ev.t_init
+
+    assert second_depth(2) < second_depth(1)
+
+
+def test_uncontended_delivery_matches_paper_tau():
+    """On the calibrated symmetric network with a free channel, the derived
+    delivery step reduces exactly to the paper's t + tau."""
+    eng, stack = engine_for("streaming", H=10, K=2, tau=2)
+    stack = perturb(stack)
+    stack = eng.on_step_end(0, stack)
+    ev = eng.in_flight[0]
+    # fragment bytes differ slightly from the calibrated mean; allow +-1 step
+    assert abs((ev.deliver_at - ev.t_init) - 2) <= 1
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous topology cost models
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_topology_matches_network_model():
+    net = NetworkModel(num_workers=4, latency_s=0.1, bandwidth_Bps=1e9)
+    topo = net.to_topology()
+    for nbytes in (0, 1_000_000, 1_000_000_000):
+        assert topo.allreduce_time(nbytes) == pytest.approx(
+            net.allreduce_time(nbytes), rel=1e-9)
+
+
+def test_ring_bottleneck_link_dominates():
+    """One slow link paces every ring phase."""
+    fast = Topology.uniform(4, latency_s=0.01, bandwidth_Bps=1e9)
+    slow = fast.degrade_link(0, 1, bandwidth_factor=0.1, symmetric=False)
+    n = 100_000_000
+    t_fast = fast.allreduce_time(n)
+    t_slow = slow.allreduce_time(n)
+    assert t_slow > t_fast
+    # phase time = max(lat + chunk/bw); slow link bw 1e8, chunk n/4
+    expect = 2 * 3 * (0.01 + (n / 4) / 1e8)
+    assert t_slow == pytest.approx(expect, rel=1e-9)
+
+
+def test_hierarchical_collective_cost():
+    topo = hub_and_spoke(4, spoke_latency_s=0.05, spoke_bandwidth_Bps=1e9)
+    n = 10_000_000
+    # gather + broadcast, each paced by identical spokes: 2 * (lat + n/bw)
+    assert topo.allreduce_time(n) == pytest.approx(2 * (0.05 + n / 1e9),
+                                                   rel=1e-9)
+    lb = topo.link_bytes(n)
+    # each spoke link carries the payload once per direction
+    assert lb.sum() == pytest.approx(6 * n)
+    assert lb[0, 0] == 0.0
+
+
+def test_ring_link_bytes_conservation():
+    topo = Topology.uniform(4, latency_s=0.01, bandwidth_Bps=1e9)
+    n = 4_000_000
+    lb = topo.link_bytes(n)
+    # 4 directed ring links x 2(M-1)/M * n each
+    assert lb.sum() == pytest.approx(4 * 2 * 3 / 4 * n)
+    assert (lb > 0).sum() == 4
+
+
+def test_asymmetric_scenario_shape_and_asymmetry():
+    topo = four_region_asymmetric()
+    assert topo.num_workers == 4
+    assert not topo.is_symmetric
+    assert topo.regions == ("us-east", "us-west", "eu-west", "ap-northeast")
+    with pytest.raises(ValueError):
+        make_scenario("asym4", num_workers=8)
+    with pytest.raises(KeyError):
+        make_scenario("nope")
+
+
+def test_scenario_engine_produces_per_link_stats():
+    """Acceptance: a heterogeneous 4-region run yields per-link transfer
+    stats with region-named links and a busiest link."""
+    topo = dataclasses.replace(four_region_asymmetric(),
+                               step_time_s=1.0)
+    eng, stack = engine_for("cocodc", M=4, H=8, K=2, tau=2, network=topo)
+    stack = perturb(stack)
+    for t in range(16):
+        stack = eng.on_step_end(t, stack)
+    assert eng.n_syncs > 0
+    ls = eng.link_stats()
+    assert ls["links"], "expected per-link traffic"
+    assert ls["busiest_link"] in ls["links"]
+    assert any("ap-northeast" in k for k in ls["links"])
+    total = sum(rec["bytes"] for rec in ls["links"].values())
+    # ring: every sync's wire bytes cross 4 links at 2(M-1)/M each
+    assert total == pytest.approx(eng.bytes_sent * 4 * 2 * 3 / 4)
+
+
+# ---------------------------------------------------------------------------
+# unified bytes accounting (blocking DiLoCo vs overlapped)
+# ---------------------------------------------------------------------------
+
+
+def test_diloco_bytes_respect_wire_format():
+    """The blocking DiLoCo branch now charges the same compressed wire bytes
+    as the overlapped methods (bf16 halves, top-k scales by 2*frac)."""
+    eng_raw, s = engine_for("diloco", H=5)
+    eng_bf16, s2 = engine_for("diloco", H=5, sync_dtype="bfloat16")
+    s, s2 = perturb(s), perturb(s2)
+    for t in range(5):
+        s = eng_raw.on_step_end(t, s)
+        s2 = eng_bf16.on_step_end(t, s2)
+    assert eng_raw.n_syncs == eng_bf16.n_syncs == 1
+    assert eng_bf16.bytes_sent == eng_raw.bytes_sent // 2
+    # and the blocking time shrinks with the payload
+    assert eng_bf16.wall_clock < eng_raw.wall_clock
+
+
+def test_link_pricing_prefers_cheap_fragment():
+    """With link pricing on, equal rates tie-break to the cheaper fragment."""
+    from repro.core.adaptive import AdaptiveState, select_fragment
+    st = AdaptiveState(K=2, H=100)
+    st.rate = [1.0, 1.0]
+    st.last_sync = [0, 0]
+    # fragment 1 is 10x cheaper to ship
+    assert select_fragment(st, 10, costs=[10.0, 1.0]) == 1
+    # without costs, ties resolve to the lowest index (Eq. 12 determinism)
+    assert select_fragment(st, 10) == 0

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: skip, never collection-error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.delay_comp import blend, compensate
