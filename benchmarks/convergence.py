@@ -8,12 +8,15 @@ reduction, not absolute perplexities.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 
 from benchmarks.common import Timer, emit, save_json
 
 from repro.configs import CoCoDCConfig
 from repro.configs.base import ModelConfig
+from repro.core.network import make_scenario
 from repro.core.trainer import CrossRegionTrainer, TrainerConfig
 
 MODEL = ModelConfig(name="bench-lm", family="dense", n_layers=4, d_model=96,
@@ -33,16 +36,46 @@ def protocol_cfg(method: str, steps: int) -> CoCoDCConfig:
 
 
 def run_method(method: str, steps: int, seed: int = 0,
-               engine_impl: str = "jit"):
+               engine_impl: str = "jit", ccfg: CoCoDCConfig | None = None,
+               network=None):
     tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
                          total_steps=steps, warmup_steps=steps // 10,
                          inner_lr=3e-3, seed=seed, eval_batch=8,
                          noniid_frac=0.3, engine_impl=engine_impl)
-    tr = CrossRegionTrainer(MODEL, protocol_cfg(method, steps), tcfg)
+    tr = CrossRegionTrainer(MODEL, ccfg or protocol_cfg(method, steps), tcfg,
+                            network=network)
     with Timer() as t:
         hist = tr.run(eval_every=max(10, steps // 20), log=lambda s: None)
     return {"history": hist, "stats": tr.engine.stats(), "host_s": t.dt,
             "link_stats": tr.engine.link_stats(), "trainer": tr}
+
+
+def link_pricing_compare(steps: int) -> dict:
+    """Eq. 12 (raw R_p argmax) vs Algorithm-2 cost-aware fragment selection
+    (R_p per WAN-second) under the `transpacific_flaky` heterogeneous topology
+    (ROADMAP open item). Emits per-link stats for both runs so the busiest-link
+    shift is visible in the result JSON."""
+    out = {}
+    for pricing, key in ((False, "eq12"), (True, "cost_aware")):
+        ccfg = dataclasses.replace(protocol_cfg("cocodc", steps),
+                                   link_pricing=pricing)
+        net = make_scenario("transpacific_flaky", num_workers=ccfg.num_workers,
+                            step_time_s=1.0)
+        r = run_method("cocodc", steps, ccfg=ccfg, network=net)
+        out[key] = {k: r[k] for k in ("history", "stats", "host_s",
+                                      "link_stats")}
+        final = r["history"][-1]
+        emit(f"link_pricing/{key}", 0.0,
+             f"final_ppl={final['ppl']:.2f};"
+             f"busiest_s={r['stats']['busiest_link_seconds']:.1f};"
+             f"wall={r['stats']['wall_clock_s']:.0f}s;"
+             f"busiest_link={r['link_stats']['busiest_link']}")
+    b_eq = out["eq12"]["stats"]["busiest_link_seconds"]
+    b_ca = out["cost_aware"]["stats"]["busiest_link_seconds"]
+    if b_eq > 0:
+        emit("link_pricing/busiest_link_relief", 0.0,
+             f"{100 * (1 - b_ca / b_eq):.1f}%")
+    return out
 
 
 def steps_to_ppl(hist, target):
@@ -52,7 +85,7 @@ def steps_to_ppl(hist, target):
     return None
 
 
-def main(steps: int = 480, seeds=(0,)) -> dict:
+def main(steps: int = 480, seeds=(0,), link_pricing: bool = False) -> dict:
     out = {}
     for method in ("diloco", "streaming", "cocodc"):
         runs = []
@@ -85,10 +118,18 @@ def main(steps: int = 480, seeds=(0,)) -> dict:
     if table.get("cocodc") and table.get("diloco"):
         red = 100 * (1 - table["cocodc"] / table["diloco"])
         emit("cocodc_vs_diloco_step_reduction", 0.0, f"{red:.1f}%")
-    save_json("convergence", {"runs": out, "target_ppl": target,
-                              "steps_to_target": table})
+    payload = {"runs": out, "target_ppl": target, "steps_to_target": table}
+    if link_pricing:
+        payload["link_pricing"] = link_pricing_compare(steps)
+    save_json("convergence", payload)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=480)
+    ap.add_argument("--link-pricing", action="store_true",
+                    help="also compare Eq. 12 vs Algorithm-2 cost-aware "
+                         "fragment selection under transpacific_flaky")
+    a = ap.parse_args()
+    main(steps=a.steps, link_pricing=a.link_pricing)

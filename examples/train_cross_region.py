@@ -29,7 +29,11 @@ def main():
                     help="heterogeneous WAN scenario (e.g. asym4 = asymmetric "
                          "4-region mesh with transpacific bottleneck)")
     ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"])
+    ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
+                    help="segment-scanned execution engine vs per-step loop")
     ap.add_argument("--link-pricing", action="store_true")
+    ap.add_argument("--resume", default=None,
+                    help="trainer_state_v1 checkpoint to continue from")
     ap.add_argument("--full-model", action="store_true")
     args = ap.parse_args()
     tag = args.method if args.topology is None else f"{args.method}_{args.topology}"
@@ -42,11 +46,14 @@ def main():
         "--local-batch", "4", "--seq-len", "64",
         "--eval-every", "50",
         "--engine-impl", args.engine_impl,
+        "--loop", args.loop,
         "--ckpt", f"checkpoints/{tag}_paper150m.msgpack",
         "--history-out", f"experiments/train_{tag}.json",
     ]
     if args.topology:
         argv.extend(["--topology", args.topology])
+    if args.resume:
+        argv.extend(["--resume", args.resume])
     if args.link_pricing:
         argv.append("--link-pricing")
     if not args.full_model:

@@ -1,1 +1,1 @@
-from repro.checkpoint.io import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.io import load_pytree, restore_like, save_pytree  # noqa: F401

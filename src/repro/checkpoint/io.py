@@ -54,3 +54,31 @@ def save_pytree(path: str, tree: Any):
 def load_pytree(path: str) -> Any:
     with open(path, "rb") as f:
         return msgpack.unpackb(f.read(), ext_hook=_decode, strict_map_key=False)
+
+
+def restore_like(ref: Any, loaded: Any) -> Any:
+    """Re-type a `load_pytree` result onto the structure of `ref`.
+
+    msgpack round-trips containers as plain dicts/lists, losing NamedTuples and
+    registered dataclasses. Given a live reference pytree with the target
+    structure, this grafts the loaded leaves back onto it, casting each to the
+    reference leaf's dtype (so bf16 leaves saved via the f32 wire format come
+    back as bf16). None subtrees must match on both sides (jax flattening
+    skips them symmetrically)."""
+    ref_leaves, treedef = jax.tree.flatten(ref)
+    loaded_leaves = jax.tree.leaves(loaded)
+    if len(ref_leaves) != len(loaded_leaves):
+        raise ValueError(
+            f"checkpoint structure mismatch: reference has {len(ref_leaves)} "
+            f"leaves, checkpoint has {len(loaded_leaves)}")
+    out = []
+    for r, l in zip(ref_leaves, loaded_leaves):
+        if hasattr(r, "dtype") and hasattr(r, "shape"):
+            a = jnp.asarray(l).astype(r.dtype)
+            if a.shape != r.shape:
+                raise ValueError(
+                    f"checkpoint leaf shape mismatch: {a.shape} vs {r.shape}")
+            out.append(a)
+        else:
+            out.append(type(r)(l))
+    return jax.tree.unflatten(treedef, out)

@@ -147,6 +147,25 @@ def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
     )
 
 
+def state_to_dict(state: EngineState) -> dict:
+    """EngineState -> plain field dict (checkpoint wire format). Pytree
+    structure inside each field is preserved; msgpack can serialize the result
+    where it cannot serialize the registered dataclass itself."""
+    return {f.name: getattr(state, f.name)
+            for f in dataclasses.fields(EngineState)}
+
+
+def state_from_dict(ref: EngineState, d: dict) -> EngineState:
+    """Rebuild an EngineState from `state_to_dict` output, casting every leaf
+    to the dtype/shape of the matching leaf in `ref` (a live state from
+    `init_state` — guarantees None-fields and bf16 leaves round-trip)."""
+    from repro.checkpoint.io import restore_like
+    fields = {}
+    for f in dataclasses.fields(EngineState):
+        fields[f.name] = restore_like(getattr(ref, f.name), d[f.name])
+    return EngineState(**fields)
+
+
 # ---------------------------------------------------------------------------
 # pure transitions
 # ---------------------------------------------------------------------------

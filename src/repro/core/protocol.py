@@ -211,6 +211,34 @@ class ProtocolEngine:
         costs = self._frag_cost if self.cfg.link_pricing else None
         return adaptive_lib.select_fragment(self.adaptive, t, busy, costs=costs)
 
+    # ------------------------------------------------------ event-driven API
+
+    def next_event_step(self, t: int) -> "int | None":
+        """Smallest step t' >= t at which `on_step_end(t', ...)` performs a
+        protocol action: a scheduled initiation slot, a due delivery, or the
+        DiLoCo blocking round. None for method="local" (the host loop may fuse
+        every remaining step into one scanned segment).
+
+        The schedule of WHEN is deterministic given the host state; WHICH
+        fragment a cocodc initiation picks is data-dependent (Eq. 11), so the
+        caller must re-query after every event."""
+        if self.method == "local":
+            return None
+        if self.method == "diloco":
+            return t + (self.H - 1 - t) % self.H
+        h = self.h_stream if self.method == "streaming" else self.h_cocodc
+        nxt = t if t % h == 0 else t + h - t % h
+        for ev in self.pending:
+            nxt = min(nxt, max(t, ev.deliver_at))
+        return nxt
+
+    def advance_steps(self, n: int):
+        """Account wall-clock for `n` quiet local steps (no protocol event) —
+        the steps a scanned segment fused away. Accumulated per-step to stay
+        bitwise-identical with the per-step loop's repeated `+= t_c`."""
+        for _ in range(n):
+            self.wall_clock += self.topology.t_c
+
     # ------------------------------------------------------------- main hook
 
     def on_step_end(self, t: int, params_stack):
@@ -249,16 +277,51 @@ class ProtocolEngine:
                     self._initiate(t, params_stack, p)
         return params_stack
 
+    # ---------------------------------------------------------- checkpointing
+
+    def scheduler_state(self) -> Dict[str, object]:
+        """Host-side scheduler state (everything outside the EngineState
+        pytree) as plain serializable containers — the in-flight schedule,
+        WAN-channel clocks, and traffic accounting. The simulated wall-clock
+        itself lives in TrainerState (single authority), not here."""
+        return {
+            "pending": [[ev.frag, ev.t_init, ev.deliver_at, ev.finish_time,
+                         ev.seq] for ev in self.pending],
+            "seq": self._seq,
+            "comm_seconds": self.comm_seconds,
+            "bytes_sent": self.bytes_sent,
+            "n_syncs": self.n_syncs,
+            "channel_free": [float(x) for x in self._channel_free],
+            "worker_available": [bool(x) for x in self.worker_available],
+            "link_bytes": self.link_bytes,
+            "link_seconds": self.link_seconds,
+        }
+
+    def restore_scheduler(self, st: Dict[str, object]):
+        """Inverse of `scheduler_state` (EngineState is restored separately)."""
+        self.pending = [PendingSync(frag=int(r[0]), t_init=int(r[1]),
+                                    deliver_at=int(r[2]),
+                                    finish_time=float(r[3]), seq=int(r[4]))
+                        for r in st["pending"]]
+        self._seq = int(st["seq"])
+        self.comm_seconds = float(st["comm_seconds"])
+        self.bytes_sent = int(st["bytes_sent"])
+        self.n_syncs = int(st["n_syncs"])
+        self._channel_free = [float(x) for x in st["channel_free"]]
+        self.worker_available = [bool(x) for x in st["worker_available"]]
+        self.link_bytes = np.asarray(st["link_bytes"], dtype=np.float64)
+        self.link_seconds = np.asarray(st["link_seconds"], dtype=np.float64)
+
     # ---------------------------------------------------------------- stats
 
     def stats(self) -> Dict[str, float]:
         return {
-            "wall_clock_s": self.wall_clock,
-            "comm_seconds": self.comm_seconds,
+            "wall_clock_s": float(self.wall_clock),
+            "comm_seconds": float(self.comm_seconds),
             "bytes_sent": float(self.bytes_sent),
             "n_syncs": float(self.n_syncs),
-            "overlap_ratio": (0.0 if self.wall_clock == 0 else
-                              min(1.0, self.comm_seconds / self.wall_clock)),
+            "overlap_ratio": float(0.0 if self.wall_clock == 0 else
+                                   min(1.0, self.comm_seconds / self.wall_clock)),
             "target_syncs_N": float(self.N),
             "busiest_link_bytes": float(self.link_bytes.max(initial=0.0)),
             "busiest_link_seconds": float(self.link_seconds.max(initial=0.0)),

@@ -6,24 +6,41 @@ train step is vmapped over it (on the multi-pod mesh this axis is sharded over
 `pod`, making each pod a datacenter — see launch/). The engine is host-side
 scheduling around jitted device ops, exactly the structure of a real deployment's
 coordinator process.
+
+Execution engine (segment-scanned): the host loop iterates over PROTOCOL EVENTS,
+not steps. All inner steps between consecutive events (fragment initiations,
+deliveries, DiLoCo rounds) run as ONE jitted `lax.scan` over a prefetched
+stacked batch segment (`SegmentRunner`), so N steps cost one dispatch instead of
+N — the WAN-hiding structure of Streaming DiLoCo/CoCoDC maps onto long pure
+segments punctuated by sparse syncs. `loop="per_step"` keeps the legacy
+one-dispatch-per-step path for golden-trajectory parity tests and debugging.
+
+Checkpoint/resume: the full run state — `TrainerState` pytree (params stack,
+inner optimizer, EngineState, step/wall-clock/data cursor) plus the host
+scheduler (in-flight transfers, WAN channel clocks, traffic matrices) and the
+eval history — round-trips atomically through checkpoint/io at any segment
+boundary; a resumed run replays the exact trajectory of an uninterrupted one.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.io import load_pytree, restore_like, save_pytree
 from repro.configs.base import CoCoDCConfig, ModelConfig
+from repro.core import engine_state as es
 from repro.core.fragments import make_fragmenter
 from repro.core.network import NetworkModel, Topology, paper_network
 from repro.core.protocol import ProtocolEngine
-from repro.data.pipeline import MarkovCorpus, make_worker_streams, stacked_batch
+from repro.data.pipeline import (MarkovCorpus, make_worker_streams,
+                                 stacked_batch, stacked_segment)
 from repro.models import api
 from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.optim.adamw import AdamWState
 
 
 @dataclasses.dataclass
@@ -42,6 +59,97 @@ class TrainerConfig:
     # "host" = same pure functions executed eagerly (legacy-equivalent path,
     # kept for golden-trajectory parity tests and debugging)
     engine_impl: str = "jit"
+    # "segment" = fuse all inner steps between protocol events under one jitted
+    # lax.scan (hot path); "per_step" = one dispatch per step (legacy path,
+    # kept for golden-trajectory parity tests and debugging)
+    loop: str = "segment"
+    # longest fused segment (bounds the prefetched batch stack for event-free
+    # stretches, e.g. method="local"); power of two keeps the chunked scan's
+    # compiled-program set minimal
+    max_segment: int = 64
+
+
+@dataclasses.dataclass
+class TrainerState:
+    """Everything device-side a resumed run needs, as one pytree: worker-stacked
+    params + inner AdamW state, the protocol EngineState, and the scalar run
+    cursors. Host-side scheduler state (in-flight transfer schedule, channel
+    clocks, traffic matrices) rides alongside in the checkpoint dict — see
+    `CrossRegionTrainer.checkpoint_state`."""
+    params_stack: Any
+    opt_state: Any
+    engine: es.EngineState
+    step: int
+    wall_clock: float
+    data_cursor: int    # == step (data is a pure fn of step) — kept explicit
+                        # so a future stateful loader has a slot to fill
+
+
+jax.tree_util.register_dataclass(
+    TrainerState,
+    data_fields=[f.name for f in dataclasses.fields(TrainerState)],
+    meta_fields=[])
+
+
+CKPT_FORMAT = "trainer_state_v1"
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_gen_frames():
+    """Audio-stub frame segments in one dispatch: vmap the per-step folded-key
+    generator over the step axis (rows are invariant to the padded length, so
+    the per-step and segment paths share one generator and stay bitwise-equal)."""
+    def gen(root_key, steps, batch, n_prefix, dim):
+        def one(step):
+            key = jax.random.fold_in(root_key, step)
+            return jax.random.normal(key, (batch, n_prefix, dim),
+                                     jnp.float32) * 0.1
+        return jax.vmap(one)(steps)
+    return jax.jit(gen, static_argnums=(2, 3, 4))
+
+
+class SegmentRunner:
+    """Fused inner-step executor: scans `single_step` (vmapped over the worker
+    axis) across a stacked batch segment, carrying (params_stack, opt_state)
+    and consuming a per-step LR array.
+
+    The jit cache retraces per distinct scan length, and protocol event gaps
+    vary (queueing shifts deliveries, Eq. 11 shifts initiations), so a raw
+    per-length cache would recompile all run long. Segments are therefore
+    dispatched as DESCENDING POWER-OF-TWO chunks (13 -> 8+4+1): the compiled-
+    program set is bounded by log2(max segment), and since quiet steps carry no
+    protocol interaction, the chunked scan is bitwise-identical to one fused
+    scan (and to the per-step loop — pinned by tests/test_trainer_segments)."""
+
+    def __init__(self, single_step):
+        vstep = jax.vmap(single_step, in_axes=(0, 0, 0, None))
+
+        def run_segment(params_stack, opt_state, batch_seg, lrs):
+            def body(carry, xs):
+                batch, lr = xs
+                p, o, losses = vstep(carry[0], carry[1], batch, lr)
+                return (p, o), losses
+
+            (p, o), losses = jax.lax.scan(
+                body, (params_stack, opt_state), (batch_seg, lrs))
+            return p, o, losses          # losses: (n, M)
+
+        self._fn = jax.jit(run_segment)
+
+    def __call__(self, params_stack, opt_state, batch_seg, lrs):
+        n = int(lrs.shape[0])
+        loss_chunks = []
+        i = 0
+        while i < n:
+            c = 1 << ((n - i).bit_length() - 1)   # largest power of two <= n-i
+            chunk = jax.tree.map(lambda x: x[i:i + c], batch_seg)
+            params_stack, opt_state, losses = self._fn(
+                params_stack, opt_state, chunk, lrs[i:i + c])
+            loss_chunks.append(losses)
+            i += c
+        losses = (loss_chunks[0] if len(loss_chunks) == 1
+                  else jnp.concatenate(loss_chunks))
+        return params_stack, opt_state, losses
 
 
 class CrossRegionTrainer:
@@ -76,6 +184,9 @@ class CrossRegionTrainer:
         # held-out IID stream (global backbone) for consensus-model evaluation
         self.eval_stream = MarkovCorpus(vocab=model_cfg.vocab, seed=tcfg.seed,
                                         worker_id=-1, noniid_frac=0.0)
+        # frame RNG for the audio stub frontend: per-step keys are folded off
+        # this root, never constructed from raw step arithmetic
+        self._frame_key = jax.random.PRNGKey(0x5EED)
 
         mcfg, tc = model_cfg, tcfg
 
@@ -88,6 +199,7 @@ class CrossRegionTrainer:
 
         self._train_step = jax.jit(jax.vmap(single_step,
                                             in_axes=(0, 0, 0, None)))
+        self.segment_runner = SegmentRunner(single_step)
 
         def eval_loss(params, batch):
             loss, metrics = api.loss_fn(mcfg, params, batch)
@@ -97,27 +209,52 @@ class CrossRegionTrainer:
         self.history: List[Dict] = []
         self.step = 0
 
-    def lr(self, step: int):
+    def lr(self, step):
+        """Inner LR at `step` — accepts a scalar or a per-step array."""
         return warmup_cosine(step, base_lr=self.tcfg.inner_lr,
                              warmup_steps=self.tcfg.warmup_steps,
                              total_steps=self.tcfg.total_steps)
 
+    # ------------------------------------------------------- data + frontends
+
     def _augment(self, batch, step, stacked: bool):
-        """Add stub-frontend inputs for the audio family (frames are the
-        carve-out stub: deterministic synthetic frame embeddings)."""
+        """Add stub-frontend inputs for the audio family. Uses the SAME jitted
+        generator as the segment path (a normal() computed eagerly vs under
+        jit/vmap differs in the last ulp, which would break scanned-vs-per-step
+        bitwise parity)."""
         if self.mcfg.family != "audio":
             return batch
-        import jax
-        key = jax.random.PRNGKey(step ^ 0x5EED)
         B = batch["tokens"].shape[-2]
-        shape = (B, self.mcfg.n_prefix_tokens, self.mcfg.prefix_dim)
-        frames = jax.random.normal(key, shape, jnp.float32) * 0.1
+        frames = _jit_gen_frames()(self._frame_key, jnp.asarray([step]), B,
+                                   self.mcfg.n_prefix_tokens,
+                                   self.mcfg.prefix_dim)[0]
         if stacked:
             M = batch["tokens"].shape[0]
-            frames = jnp.broadcast_to(frames[None], (M,) + shape)
+            frames = jnp.broadcast_to(frames[None], (M,) + frames.shape)
         return dict(batch, frames=frames)
 
+    def _augment_segment(self, batch_seg, t0: int, n: int):
+        """Per-step frames stacked step-major: (n, M, B, P, D) — matches
+        `_augment(..., stacked=True)` at each step of the segment, generated
+        in ONE dispatch (power-of-two padded like the data segments)."""
+        if self.mcfg.family != "audio":
+            return batch_seg
+        M, B = batch_seg["tokens"].shape[1], batch_seg["tokens"].shape[2]
+        m = 1 << max(0, n - 1).bit_length()
+        steps = jnp.arange(t0, t0 + m)
+        frames = _jit_gen_frames()(self._frame_key, steps, B,
+                                   self.mcfg.n_prefix_tokens,
+                                   self.mcfg.prefix_dim)[:n]
+        frames = jnp.broadcast_to(frames[:, None],
+                                  (n, M) + frames.shape[1:])
+        return dict(batch_seg, frames=frames)
+
+    # -------------------------------------------------------------- stepping
+
     def train_one_step(self):
+        """Legacy per-step path: one dispatch per inner step (loop="per_step").
+        The scanned path must reproduce this trajectory exactly — pinned by
+        tests/test_trainer_segments.py."""
         t = self.step
         batch = stacked_batch(self.streams, t, self.tcfg.local_batch,
                               self.tcfg.seq_len)
@@ -127,6 +264,39 @@ class CrossRegionTrainer:
         self.params_stack = self.engine.on_step_end(t, self.params_stack)
         self.step += 1
         return float(jnp.mean(losses))
+
+    def _run_segment(self, t0: int, n: int) -> float:
+        """Run steps [t0, t0+n) as one scanned dispatch. The segment is chosen
+        so only its LAST step can be a protocol event; quiet steps advance the
+        simulated wall-clock without touching the engine."""
+        batch_seg = stacked_segment(self.streams, t0, n, self.tcfg.local_batch,
+                                    self.tcfg.seq_len)
+        batch_seg = self._augment_segment(batch_seg, t0, n)
+        lrs = self.lr(jnp.arange(t0, t0 + n))
+        self.params_stack, self.opt_state, losses = self.segment_runner(
+            self.params_stack, self.opt_state, batch_seg, lrs)
+        if n > 1:
+            self.engine.advance_steps(n - 1)
+        self.params_stack = self.engine.on_step_end(t0 + n - 1,
+                                                    self.params_stack)
+        self.step = t0 + n
+        return float(jnp.mean(losses[-1]))
+
+    def _segment_end(self, t: int, target: int, eval_every: int,
+                     ckpt_every: int) -> int:
+        """Last step (inclusive) of the segment starting at t: the earliest of
+        the next protocol event, the next eval/checkpoint boundary, and the end
+        of the run."""
+        end = min(target - 1, t + self.tcfg.max_segment - 1)
+        ne = self.engine.next_event_step(t)
+        if ne is not None:
+            end = min(end, ne)
+        for every in (eval_every, ckpt_every):
+            if every:
+                end = min(end, (t // every + 1) * every - 1)
+        return end
+
+    # ------------------------------------------------------------------ eval
 
     def evaluate(self, n_batches: int = 2) -> Dict[str, float]:
         """Perplexity of the consensus (global) model on the held-out stream."""
@@ -140,19 +310,41 @@ class CrossRegionTrainer:
         nll /= n_batches
         return {"nll": nll, "ppl": float(jnp.exp(nll))}
 
+    # ------------------------------------------------------------------- run
+
+    def _record_eval(self, train_loss: float, log: Callable[[str], None]):
+        ev = self.evaluate()
+        rec = {"step": self.step, "train_loss": train_loss, **ev,
+               **self.engine.stats()}
+        self.history.append(rec)
+        log(f"[{self.tcfg.method}] step {self.step:5d} "
+            f"train {train_loss:.4f} eval_nll {ev['nll']:.4f} "
+            f"ppl {ev['ppl']:.2f} wall {self.engine.wall_clock:.0f}s")
+
     def run(self, steps: Optional[int] = None, eval_every: int = 50,
-            log: Callable[[str], None] = lambda s: None):
-        steps = steps if steps is not None else self.tcfg.total_steps
-        for _ in range(steps):
-            train_loss = self.train_one_step()
-            if self.step % eval_every == 0 or self.step == steps:
-                ev = self.evaluate()
-                rec = {"step": self.step, "train_loss": train_loss, **ev,
-                       **self.engine.stats()}
-                self.history.append(rec)
-                log(f"[{self.tcfg.method}] step {self.step:5d} "
-                    f"train {train_loss:.4f} eval_nll {ev['nll']:.4f} "
-                    f"ppl {ev['ppl']:.2f} wall {self.engine.wall_clock:.0f}s")
+            log: Callable[[str], None] = lambda s: None,
+            ckpt_path: Optional[str] = None, ckpt_every: int = 0):
+        """Train to absolute step `steps` (default tcfg.total_steps) — a resumed
+        trainer continues from its restored cursor. With ckpt_path/ckpt_every,
+        atomically checkpoints the full run state at those segment boundaries."""
+        target = steps if steps is not None else self.tcfg.total_steps
+        if self.tcfg.loop == "per_step":
+            while self.step < target:
+                train_loss = self.train_one_step()
+                if self.step % eval_every == 0 or self.step == target:
+                    self._record_eval(train_loss, log)
+                if (ckpt_path and ckpt_every and self.step % ckpt_every == 0):
+                    self.save_checkpoint(ckpt_path)
+            return self.history
+
+        while self.step < target:
+            t0 = self.step
+            end = self._segment_end(t0, target, eval_every, ckpt_every)
+            train_loss = self._run_segment(t0, end - t0 + 1)
+            if self.step % eval_every == 0 or self.step == target:
+                self._record_eval(train_loss, log)
+            if ckpt_path and ckpt_every and self.step % ckpt_every == 0:
+                self.save_checkpoint(ckpt_path)
         return self.history
 
     def steps_to_ppl(self, target: float) -> Optional[int]:
@@ -160,3 +352,90 @@ class CrossRegionTrainer:
             if rec["ppl"] <= target:
                 return rec["step"]
         return None
+
+    # ---------------------------------------------------------- checkpointing
+
+    def trainer_state(self) -> TrainerState:
+        return TrainerState(
+            params_stack=self.params_stack,
+            opt_state=self.opt_state,
+            engine=self.engine.state,
+            step=self.step,
+            wall_clock=float(self.engine.wall_clock),
+            data_cursor=self.step,
+        )
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        """Full-run checkpoint payload: TrainerState pytree (as plain field
+        dicts — msgpack-safe), the host scheduler, eval history, and identity
+        metadata for resume validation."""
+        ts = self.trainer_state()
+        return {
+            "format": CKPT_FORMAT,
+            "trainer_state": {
+                "params_stack": ts.params_stack,
+                "opt_state": {"mu": ts.opt_state.mu, "nu": ts.opt_state.nu,
+                              "count": ts.opt_state.count},
+                "engine": es.state_to_dict(ts.engine),
+                "step": ts.step,
+                "wall_clock": ts.wall_clock,
+                "data_cursor": ts.data_cursor,
+            },
+            "scheduler": self.engine.scheduler_state(),
+            "history": self.history,
+            "meta": {"arch": self.mcfg.name, **self._traj_meta()},
+        }
+
+    def _traj_meta(self) -> Dict[str, Any]:
+        """Every config knob the trajectory is a function of (data streams, LR
+        schedule, protocol event schedule) — saved in the checkpoint and
+        validated on resume so a mismatched resume errors instead of silently
+        diverging."""
+        t, c = self.tcfg, self.ccfg
+        return {"method": t.method, "seed": t.seed, "total_steps": t.total_steps,
+                "warmup_steps": t.warmup_steps, "inner_lr": t.inner_lr,
+                "weight_decay": t.weight_decay, "local_batch": t.local_batch,
+                "seq_len": t.seq_len, "noniid_frac": t.noniid_frac,
+                "num_workers": c.num_workers, "local_steps": c.local_steps,
+                "num_fragments": c.num_fragments,
+                "overlap_depth": c.overlap_depth}
+
+    def save_checkpoint(self, path: str):
+        save_pytree(path, self.checkpoint_state())
+
+    def restore_checkpoint(self, path: str, state: Optional[Dict] = None):
+        """Restore a `checkpoint_state` dump into this (freshly built) trainer.
+        The trainer must have been constructed with the same model/protocol
+        configs; the restored run continues bit-for-bit where the saved one
+        stopped (pinned by tests/test_checkpoint.py kill-and-resume). Pass
+        `state` if the checkpoint is already deserialized (avoids a second
+        full read of a multi-GB file)."""
+        st = load_pytree(path) if state is None else state
+        if st.get("format") != CKPT_FORMAT:
+            raise ValueError(f"not a {CKPT_FORMAT} checkpoint: {path}")
+        meta = st["meta"]
+        for k, want in (("arch", self.mcfg.name), *self._traj_meta().items()):
+            if meta.get(k) != want:
+                raise ValueError(
+                    f"checkpoint {k}={meta.get(k)!r} != trainer {want!r} — "
+                    f"resume requires the saved run's config (data streams, LR "
+                    f"schedule, and the protocol event schedule derive from it)")
+        ts = st["trainer_state"]
+        self.params_stack = restore_like(self.params_stack, ts["params_stack"])
+        self.opt_state = AdamWState(
+            mu=restore_like(self.opt_state.mu, ts["opt_state"]["mu"]),
+            nu=restore_like(self.opt_state.nu, ts["opt_state"]["nu"]),
+            count=restore_like(self.opt_state.count, ts["opt_state"]["count"]))
+        self.engine.state = es.state_from_dict(self.engine.state, ts["engine"])
+        self.engine.restore_scheduler(st["scheduler"])
+        # TrainerState is the single authority for the run cursors
+        self.engine.wall_clock = float(ts["wall_clock"])
+        self.step = int(ts["step"])
+        if int(ts["data_cursor"]) != self.step:
+            raise ValueError(
+                f"checkpoint data_cursor={ts['data_cursor']} != "
+                f"step={self.step} (stateful loaders are not supported yet)")
+        self.history = [
+            {k: (v.item() if getattr(v, "shape", None) == () else v)
+             for k, v in rec.items()} for rec in st["history"]]
+        return self

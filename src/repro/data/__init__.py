@@ -1,1 +1,2 @@
-from repro.data.pipeline import MarkovCorpus, make_worker_streams  # noqa: F401
+from repro.data.pipeline import (MarkovCorpus, make_worker_streams,  # noqa: F401
+                                 stacked_batch, stacked_segment)

@@ -12,10 +12,42 @@ sees `next_batch(step) -> {tokens, labels}`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _gen_batch(succ, weights, seed_arr, step_arr, batch_size, seq_len):
+    """One (B, S) batch as a pure function of (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed_arr), step_arr)
+    k0, k1 = jax.random.split(key)
+    state = jax.random.randint(k0, (batch_size,), 0, succ.shape[0])
+    choice_keys = jax.random.split(k1, seq_len + 1)
+
+    def gen(state, k):
+        idx = jax.random.categorical(
+            k, jnp.log(weights)[None].repeat(batch_size, 0))
+        nxt = succ[state, idx]
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(gen, state, choice_keys)
+    toks = jnp.moveaxis(toks, 0, 1)             # (B, S+1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_gen_batch():
+    return jax.jit(_gen_batch, static_argnums=(4, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_gen_segment():
+    # vmap over the step axis: segment[i] == batch(t0 + i) leaf-for-leaf
+    # (jax.random is vmap-invariant), in one dispatch instead of n
+    return jax.jit(jax.vmap(_gen_batch, in_axes=(None, None, None, 0, None, None)),
+                   static_argnums=(4, 5))
 
 
 @dataclasses.dataclass
@@ -40,29 +72,31 @@ class MarkovCorpus:
         self.weights = jnp.asarray(w / w.sum(), jnp.float32)
         self.succ_j = jnp.asarray(self.succ)
 
+    @property
+    def _seed32(self) -> int:
+        return (self.seed * 1_000_003 + self.worker_id) % (1 << 31)
+
     def batch(self, step: int, batch_size: int, seq_len: int):
         """Pure function of (worker, step): {tokens, labels} (B, S) int32."""
-        if not hasattr(self, "_jit_batch"):
-            def _gen(succ, weights, seed_arr, step_arr, batch_size, seq_len):
-                key = jax.random.fold_in(jax.random.PRNGKey(seed_arr), step_arr)
-                k0, k1 = jax.random.split(key)
-                state = jax.random.randint(k0, (batch_size,), 0, succ.shape[0])
-                choice_keys = jax.random.split(k1, seq_len + 1)
+        return _jit_gen_batch()(self.succ_j, self.weights, self._seed32, step,
+                                batch_size, seq_len)
 
-                def gen(state, k):
-                    idx = jax.random.categorical(
-                        k, jnp.log(weights)[None].repeat(batch_size, 0))
-                    nxt = succ[state, idx]
-                    return nxt, nxt
+    def segment(self, t0: int, n: int, batch_size: int, seq_len: int):
+        """Prefetch `n` consecutive batches in ONE dispatch: {tokens, labels}
+        with shape (n, B, S). Vmapped over the step axis of the same generator
+        as `batch`, so segment(t0, n)[i] == batch(t0 + i) leaf-for-leaf —
+        segment boundaries never change the data (pure function of
+        (worker, step); pinned by tests/test_pipeline.py).
 
-                _, toks = jax.lax.scan(gen, state, choice_keys)
-                toks = jnp.moveaxis(toks, 0, 1)             # (B, S+1)
-                return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-
-            self._jit_batch = jax.jit(_gen, static_argnums=(4, 5))
-        seed = (self.seed * 1_000_003 + self.worker_id) % (1 << 31)
-        return self._jit_batch(self.succ_j, self.weights, seed, step, batch_size,
-                               seq_len)
+        Generation is padded to the next power-of-two step count and sliced
+        (steps are independent, so the first n rows are unchanged): protocol
+        event gaps vary run-long and a compile per distinct length would
+        dominate the prefetch."""
+        m = 1 << max(0, n - 1).bit_length()
+        steps = jnp.arange(t0, t0 + m)
+        out = _jit_gen_segment()(self.succ_j, self.weights, self._seed32,
+                                 steps, batch_size, seq_len)
+        return out if m == n else jax.tree.map(lambda x: x[:n], out)
 
 
 def make_worker_streams(num_workers: int, vocab: int, *, seed: int = 0,
@@ -76,3 +110,12 @@ def stacked_batch(streams, step: int, batch_size: int, seq_len: int):
     """Worker-stacked batch: leaves (M, B, S) — feeds the worker-dim train step."""
     batches = [s.batch(step, batch_size, seq_len) for s in streams]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def stacked_segment(streams, t0: int, n: int, batch_size: int, seq_len: int):
+    """Segment prefetch for the scanned execution engine: leaves (n, M, B, S) —
+    step-major so `lax.scan` slices one worker-stacked batch per iteration.
+    Equals stacking `stacked_batch(streams, t0 + i)` over i, in M dispatches
+    instead of n * M."""
+    segs = [s.segment(t0, n, batch_size, seq_len) for s in streams]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *segs)

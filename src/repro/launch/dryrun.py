@@ -257,6 +257,8 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     cbytes, per_kind, counts = collective_bytes(hlo)
     result.update({
@@ -276,6 +278,35 @@ def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool,
         result["pod_reduction_in_step"] = pod_collective_present(
             hlo, mesh, ops=("all-reduce", "reduce-scatter"))
         result["pod_reshard_in_step"] = pod_collective_present(hlo, mesh)
+
+    # multi-pod: prove the segment-scanned execution engine's fused multi-step
+    # program (lax.scan over the pod-vmapped train step) lowers and stays
+    # pod-local, exactly like the single step it fuses
+    if multi_pod and include_sync and shape.kind == "train" and not unroll:
+        seg_n = 4
+        seg_batch_sds = steps_lib.stack_sds(sds["batch"], seg_n)
+        seg_batch_shards = jax.tree.map(
+            lambda ns: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, *ns.spec)),
+            shards["batch"])
+        lrs_sds = jax.ShapeDtypeStruct((seg_n,), jnp.float32)
+        seg_fn = steps_lib.make_pod_segment_step(cfg, remat=True)
+        t0 = time.time()
+        with mesh:
+            jf = jax.jit(seg_fn, in_shardings=(shards["params"],
+                                               shards["opt_state"],
+                                               seg_batch_shards,
+                                               jax.sharding.NamedSharding(
+                                                   mesh,
+                                                   jax.sharding.PartitionSpec())))
+            seg_lowered = jf.lower(sds["params"], sds["opt_state"],
+                                   seg_batch_sds, lrs_sds)
+            seg_compiled = seg_lowered.compile()
+        seg_hlo = seg_compiled.as_text()
+        result["segment_steps"] = seg_n
+        result["segment_compile_s"] = round(time.time() - t0, 1)
+        result["segment_pod_reduction_in_step"] = pod_collective_present(
+            seg_hlo, mesh, ops=("all-reduce", "reduce-scatter"))
 
     # multi-pod: also lower the CoCoDC fragment sync step (the cross-region
     # collective) and verify the pod all-reduce is present there

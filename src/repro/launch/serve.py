@@ -25,7 +25,12 @@ def load_params(cfg, ckpt):
     if ckpt:
         from repro.checkpoint import load_pytree
         state = load_pytree(ckpt)
-        params = state["theta_g"] if "theta_g" in state else state
+        if isinstance(state, dict) and state.get("format") == "trainer_state_v1":
+            # full-run checkpoint (launch/train --ckpt): consensus model lives
+            # in the serialized EngineState
+            params = state["trainer_state"]["engine"]["theta_g"]
+        else:
+            params = state["theta_g"] if "theta_g" in state else state
         return jax.tree.map(jnp.asarray, params)
     return api.init_params(cfg, jax.random.PRNGKey(0))
 

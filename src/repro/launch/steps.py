@@ -116,6 +116,36 @@ def make_pod_train_step(cfg: ModelConfig, **kw):
     return jax.vmap(step, in_axes=(0, 0, 0, None))
 
 
+def make_segment_step(cfg: ModelConfig, **kw):
+    """Scan-compatible multi-step transition (one worker): runs every inner
+    step of a segment under one `lax.scan`, carrying (params, opt_state) and
+    consuming a step-major batch segment (leaves (n, ...)) plus a per-step LR
+    array (n,). This is the fused program the segment-scanned execution engine
+    dispatches between protocol events."""
+    step = make_train_step(cfg, **kw)
+
+    def segment_step(params, opt_state, batch_seg, lrs):
+        def body(carry, xs):
+            batch, lr = xs
+            p, o, loss = step(carry[0], carry[1], batch, lr)
+            return (p, o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (batch_seg, lrs))
+        return params, opt_state, losses
+
+    return segment_step
+
+
+def make_pod_segment_step(cfg: ModelConfig, **kw):
+    """Worker-stacked fused segment: vmap of the scanned segment over the pod
+    axis. Batch segments are step-major with the pod axis second — leaves
+    (n, pods, B, T) — matching data/pipeline.stacked_segment; LR is shared.
+    Pod-local like the single step (dry-run asserts no pod-axis reduction)."""
+    seg = make_segment_step(cfg, **kw)
+    return jax.vmap(seg, in_axes=(0, 0, 1, None))
+
+
 def make_serve_step(cfg: ModelConfig, *, window: Optional[int] = None,
                     unroll: bool = False):
     def serve_step(params, cache, tokens):

@@ -16,7 +16,6 @@ import os
 import sys
 import time
 
-from repro.checkpoint import save_pytree
 from repro.configs import CoCoDCConfig, get_config
 from repro.core.network import SCENARIOS, make_scenario
 from repro.core.trainer import CrossRegionTrainer, TrainerConfig
@@ -34,7 +33,8 @@ def build(args):
     tcfg = TrainerConfig(
         method=args.method, local_batch=args.local_batch, seq_len=args.seq_len,
         total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
-        seed=args.seed, inner_lr=args.lr, engine_impl=args.engine_impl)
+        seed=args.seed, inner_lr=args.lr, engine_impl=args.engine_impl,
+        loop=args.loop)
     network = None
     if args.topology is not None:
         # "paper" keeps the calibrated-symmetric default (network=None) so the
@@ -72,35 +72,59 @@ def main(argv=None):
                     help="T_c seconds per local step for --topology scenarios")
     ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"],
                     help="jitted EngineState transitions vs eager host path")
+    ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
+                    help="segment-scanned execution engine (one lax.scan "
+                         "dispatch per inter-event segment) vs the legacy "
+                         "one-dispatch-per-step loop")
     ap.add_argument("--link-pricing", action="store_true",
                     help="Algorithm-2 link-aware fragment pricing (R_p/T_s,p)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="atomically checkpoint the FULL run state to --ckpt "
+                         "every N steps (segment boundaries)")
     ap.add_argument("--resume", default=None,
-                    help="checkpoint to restore theta_g/momentum from")
+                    help="checkpoint to resume from: a trainer_state_v1 "
+                         "checkpoint restores the full run (exact trajectory); "
+                         "a legacy dict restores theta_g/momentum only")
+    ap.add_argument("--stop-at", type=int, default=None,
+                    help="pause the run at this absolute step (the LR schedule "
+                         "still spans --steps); checkpoint with --ckpt and "
+                         "continue later with --resume")
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args(argv)
+    if args.ckpt_every and not args.ckpt:
+        ap.error("--ckpt-every requires --ckpt (nowhere to save)")
 
     trainer = build(args)
     if args.resume:
         from repro.checkpoint import load_pytree
-        import jax
+        from repro.core.trainer import CKPT_FORMAT
         state = load_pytree(args.resume)
-        trainer.engine.theta_g = jax.tree.map(
-            lambda a, b: b.astype(a.dtype) if hasattr(b, "astype") else b,
-            trainer.engine.theta_g, state["theta_g"])
-        trainer.engine.momentum = jax.tree.map(
-            lambda a, b: b.astype(a.dtype) if hasattr(b, "astype") else b,
-            trainer.engine.momentum, state["momentum"])
-        # workers restart from the restored consensus
-        import jax.numpy as jnp
-        trainer.params_stack = jax.tree.map(
-            lambda g: jnp.broadcast_to(
-                g[None], (trainer.ccfg.num_workers,) + g.shape).copy(),
-            trainer.engine.theta_g)
-        print(f"resumed from {args.resume} (step {state.get('step')})")
+        if isinstance(state, dict) and state.get("format") == CKPT_FORMAT:
+            trainer.restore_checkpoint(args.resume, state=state)
+            print(f"resumed full run state from {args.resume} "
+                  f"(step {trainer.step}, wall {trainer.engine.wall_clock:.0f}s)")
+        else:
+            # legacy partial checkpoint: consensus model + outer momentum only
+            import jax
+            import jax.numpy as jnp
+            trainer.engine.theta_g = jax.tree.map(
+                lambda a, b: b.astype(a.dtype) if hasattr(b, "astype") else b,
+                trainer.engine.theta_g, state["theta_g"])
+            trainer.engine.momentum = jax.tree.map(
+                lambda a, b: b.astype(a.dtype) if hasattr(b, "astype") else b,
+                trainer.engine.momentum, state["momentum"])
+            # workers restart from the restored consensus
+            trainer.params_stack = jax.tree.map(
+                lambda g: jnp.broadcast_to(
+                    g[None], (trainer.ccfg.num_workers,) + g.shape).copy(),
+                trainer.engine.theta_g)
+            print(f"resumed (legacy: theta_g/momentum only) from {args.resume} "
+                  f"(step {state.get('step')})")
     t0 = time.time()
-    hist = trainer.run(eval_every=args.eval_every,
-                       log=lambda s: print(s, flush=True))
+    hist = trainer.run(steps=args.stop_at, eval_every=args.eval_every,
+                       log=lambda s: print(s, flush=True),
+                       ckpt_path=args.ckpt, ckpt_every=args.ckpt_every)
     dt = time.time() - t0
     stats = trainer.engine.stats()
     link_stats = trainer.engine.link_stats()
@@ -113,15 +137,8 @@ def main(argv=None):
                   f"busy {rec['busy_seconds']:8.1f}s", flush=True)
         print(f"  busiest link: {link_stats['busiest_link']}", flush=True)
     if args.ckpt:
-        save_pytree(args.ckpt, {
-            "theta_g": trainer.engine.theta_g,
-            "momentum": trainer.engine.momentum,
-            "step": trainer.step,
-            "adaptive": {"last_sync": trainer.engine.adaptive.last_sync,
-                         "rate": [r if r != float("inf") else -1.0
-                                  for r in trainer.engine.adaptive.rate]},
-        })
-        print(f"checkpoint -> {args.ckpt}")
+        trainer.save_checkpoint(args.ckpt)
+        print(f"checkpoint (full run state) -> {args.ckpt}")
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

@@ -1,0 +1,199 @@
+"""Checkpoint round-trips: arbitrary pytrees (incl. bf16 leaves) through
+save_pytree/load_pytree, EngineState through the trainer_state wire format, and
+full-run kill-and-resume trajectory exactness."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, restore_like, save_pytree
+from repro.configs import get_config
+from repro.configs.base import CoCoDCConfig, ModelConfig
+from repro.core import engine_state as es
+from repro.core.trainer import (CKPT_FORMAT, CrossRegionTrainer, TrainerConfig,
+                                TrainerState)
+from repro.models import api
+
+KEY = jax.random.PRNGKey(0)
+
+TINY = ModelConfig(name="ck-tiny", family="dense", n_layers=2, d_model=48,
+                   n_heads=2, n_kv_heads=1, d_ff=96, vocab=128,
+                   compute_dtype="float32")
+
+
+def _trainer(method="cocodc", steps=24, loop="segment", seed=0):
+    mcfg = dataclasses.replace(get_config("paper_150m").reduced(),
+                               compute_dtype="float32")
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=8, num_fragments=2,
+                        overlap_depth=2)
+    tcfg = TrainerConfig(method=method, local_batch=2, seq_len=16,
+                         total_steps=steps, warmup_steps=4, inner_lr=3e-3,
+                         eval_batch=4, seed=seed, loop=loop)
+    return CrossRegionTrainer(mcfg, ccfg, tcfg)
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_bf16_leaves(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) * 0.5,
+            "b": {"c": jnp.ones((4,), jnp.float32),
+                  "d": np.arange(3, dtype=np.int32)},
+            "scalar": 7, "name": "x"}
+    path = os.path.join(tmp_path, "t.msgpack")
+    save_pytree(path, tree)
+    loaded = load_pytree(path)
+    assert jnp.asarray(loaded["a"]).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(loaded["a"], np.float32), np.asarray(tree["a"], np.float32))
+    np.testing.assert_array_equal(loaded["b"]["d"], tree["b"]["d"])
+    assert loaded["scalar"] == 7 and loaded["name"] == "x"
+
+
+def test_restore_like_retypes_and_casts(tmp_path):
+    from repro.optim.adamw import AdamWState
+    ref = AdamWState(mu={"w": jnp.zeros((2,), jnp.bfloat16)},
+                     nu={"w": jnp.zeros((2,), jnp.float32)},
+                     count=jnp.zeros((), jnp.int32))
+    src = AdamWState(mu={"w": jnp.asarray([1.5, 2.5], jnp.bfloat16)},
+                     nu={"w": jnp.asarray([3.0, 4.0], jnp.float32)},
+                     count=jnp.asarray(5, jnp.int32))
+    path = os.path.join(tmp_path, "o.msgpack")
+    save_pytree(path, {"mu": src.mu, "nu": src.nu, "count": src.count})
+    loaded = load_pytree(path)
+    out = AdamWState(mu=restore_like(ref.mu, loaded["mu"]),
+                     nu=restore_like(ref.nu, loaded["nu"]),
+                     count=restore_like(ref.count, loaded["count"]))
+    assert isinstance(out, AdamWState)
+    assert out.mu["w"].dtype == jnp.bfloat16
+    assert int(out.count) == 5
+    np.testing.assert_array_equal(np.asarray(out.nu["w"]), [3.0, 4.0])
+
+
+def test_restore_like_rejects_mismatched_structure():
+    with pytest.raises(ValueError):
+        restore_like({"a": jnp.zeros(2), "b": jnp.zeros(2)},
+                     {"a": np.zeros(2)})
+
+
+def test_engine_state_roundtrip(tmp_path):
+    """EngineState (registered-dataclass pytree, incl. a bf16 theta_g leaf and
+    a None inflight_snapshot subtree) survives the dict wire format."""
+    params = api.init_params(TINY, KEY)
+    stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (2,) + a.shape).copy(), params)
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=8, num_fragments=2)
+    state = es.init_state("streaming", ccfg, stack)     # snapshot is None
+    # exercise a bf16 leaf through the f32 wire format
+    state = dataclasses.replace(
+        state, delta_norm=state.delta_norm.astype(jnp.bfloat16))
+    path = os.path.join(tmp_path, "es.msgpack")
+    save_pytree(path, es.state_to_dict(state))
+    loaded = load_pytree(path)
+    restored = es.state_from_dict(state, loaded)
+    assert isinstance(restored, es.EngineState)
+    assert restored.inflight_snapshot is None
+    assert restored.delta_norm.dtype == jnp.bfloat16
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_trainer_state_is_pytree():
+    tr = _trainer(steps=4)
+    ts = tr.trainer_state()
+    leaves, treedef = jax.tree.flatten(ts)
+    rt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rt, TrainerState)
+    assert rt.step == tr.step and rt.data_cursor == tr.step
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["cocodc", "diloco"])
+def test_kill_and_resume_matches_uninterrupted(tmp_path, method):
+    """Acceptance: a run killed at a segment boundary and resumed from its
+    checkpoint replays the uninterrupted run's trajectory exactly — eval NLLs,
+    engine stats, and final params all bitwise-equal."""
+    ck = os.path.join(tmp_path, "ck.msgpack")
+
+    ref = _trainer(method)
+    ref.run(eval_every=8, log=lambda s: None)
+
+    interrupted = _trainer(method)
+    interrupted.run(steps=12, eval_every=8, log=lambda s: None)   # "crash"
+    interrupted.save_checkpoint(ck)
+
+    resumed = _trainer(method).restore_checkpoint(ck)
+    assert resumed.step == 12
+    resumed.run(eval_every=8, log=lambda s: None)
+
+    ra = {r["step"]: r for r in ref.history}
+    rb = {r["step"]: r for r in resumed.history}
+    # the interrupted run adds one extra eval at its stop step; every shared
+    # eval step must agree exactly
+    shared = sorted(set(ra) & set(rb))
+    assert shared, "no common eval steps"
+    for s in shared:
+        assert ra[s]["nll"] == rb[s]["nll"]
+        assert ra[s]["wall_clock_s"] == rb[s]["wall_clock_s"]
+
+    sa, sb = ref.engine.stats(), resumed.engine.stats()
+    for k in sa:
+        assert sa[k] == sb[k], f"stats[{k}]: {sa[k]} vs {sb[k]}"
+    for x, y in zip(jax.tree.leaves(ref.params_stack),
+                    jax.tree.leaves(resumed.params_stack)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_mid_flight_transfers(tmp_path):
+    """Checkpointing with fragments IN FLIGHT restores the pending schedule
+    (deliveries land at the same steps with the same payloads)."""
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    ref = _trainer("streaming")
+    ref.run(eval_every=8, log=lambda s: None)
+
+    tr = _trainer("streaming", loop="per_step")
+    while not tr.engine.pending:         # stop with a transfer on the wire
+        tr.train_one_step()
+    stop = tr.step
+    tr.save_checkpoint(ck)
+    resumed = _trainer("streaming").restore_checkpoint(ck)
+    assert [e.frag for e in resumed.engine.pending] == \
+           [e.frag for e in tr.engine.pending]
+    assert [e.deliver_at for e in resumed.engine.pending] == \
+           [e.deliver_at for e in tr.engine.pending]
+    assert resumed.step == stop
+    resumed.run(eval_every=8, log=lambda s: None)
+    ra = {r["step"]: r["nll"] for r in ref.history}
+    rb = {r["step"]: r["nll"] for r in resumed.history}
+    for s in sorted(set(ra) & set(rb)):
+        assert ra[s] == rb[s]
+
+
+def test_run_ckpt_every_saves_at_boundaries(tmp_path):
+    ck = os.path.join(tmp_path, "auto.msgpack")
+    tr = _trainer("cocodc", steps=16)
+    tr.run(eval_every=8, log=lambda s: None, ckpt_path=ck, ckpt_every=8)
+    assert os.path.exists(ck)
+    st = load_pytree(ck)
+    assert st["format"] == CKPT_FORMAT
+    assert st["trainer_state"]["step"] == 16
+    assert st["meta"]["method"] == "cocodc"
+
+
+def test_restore_rejects_wrong_method(tmp_path):
+    ck = os.path.join(tmp_path, "m.msgpack")
+    tr = _trainer("cocodc", steps=8)
+    tr.run(eval_every=8, log=lambda s: None)
+    tr.save_checkpoint(ck)
+    with pytest.raises(ValueError, match="method"):
+        _trainer("diloco").restore_checkpoint(ck)
