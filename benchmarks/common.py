@@ -15,8 +15,9 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def save_json(name: str, payload):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    """`name` may carry subdirectories (e.g. "sweep/hub_failure8")."""
     path = os.path.join(RESULTS_DIR, f"{name}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path

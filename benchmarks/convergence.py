@@ -53,12 +53,16 @@ def run_method(method: str, steps: int, seed: int = 0,
 def link_pricing_compare(steps: int) -> dict:
     """Eq. 12 (raw R_p argmax) vs Algorithm-2 cost-aware fragment selection
     (R_p per WAN-second) under the `transpacific_flaky` heterogeneous topology
-    (ROADMAP open item). Emits per-link stats for both runs so the busiest-link
-    shift is visible in the result JSON."""
+    (ROADMAP open item). Uses the SIZE-SKEWED fragmenter: the greedy balanced
+    fragmenter makes per-fragment WAN costs near-uniform, so selection rarely
+    flips at toy scale (PR 2 finding) — geometric byte shares give the two
+    policies meaningfully different prices to disagree over. Emits per-link
+    stats for both runs so the busiest-link shift is visible in the JSON."""
     out = {}
     for pricing, key in ((False, "eq12"), (True, "cost_aware")):
         ccfg = dataclasses.replace(protocol_cfg("cocodc", steps),
-                                   link_pricing=pricing)
+                                   link_pricing=pricing,
+                                   fragment_strategy="skewed")
         net = make_scenario("transpacific_flaky", num_workers=ccfg.num_workers,
                             step_time_s=1.0)
         r = run_method("cocodc", steps, ccfg=ccfg, network=net)

@@ -10,12 +10,20 @@ JSON artifacts under experiments/.
   ablations   — lambda / gamma / Eq-4-sign ablations
   kernels     — Pallas-kernel oracle timings + TPU roofline projections
   roofline    — deliverable (g): three-term roofline from the dry-run artifacts
+  sweep       — dynamic-WAN scenario x method grid (generated meshes,
+                diurnal/outage dynamics; per-scenario JSON under
+                experiments/sweep/)
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
+
+
+def _require_zero(code, name: str) -> None:
+    if code:
+        raise RuntimeError(f"{name} exited with status {code}")
 
 
 def main() -> None:
@@ -26,7 +34,8 @@ def main() -> None:
                     help="comma-separated subset of benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import ablations, convergence, kernels, roofline, wallclock
+    from benchmarks import (ablations, convergence, kernels, roofline, sweep,
+                            wallclock)
 
     steps = 240 if args.fast else 480
     ab_steps = 120 if args.fast else 240
@@ -36,6 +45,8 @@ def main() -> None:
         "roofline": lambda: roofline.main(),
         "convergence": lambda: convergence.main(steps=steps),
         "ablations": lambda: ablations.main(steps=ab_steps),
+        "sweep": lambda: _require_zero(
+            sweep.main(["--smoke"] if args.fast else []), "sweep"),
     }
     only = set(args.only.split(",")) if args.only else None
     failed = []

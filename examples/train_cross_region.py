@@ -11,13 +11,16 @@ shape (needs a real accelerator for speed), or a heterogeneous WAN scenario:
         --steps 200          # asymmetric 4-region mesh + per-link stats
     PYTHONPATH=src python examples/train_cross_region.py \
         --topology hub_spoke --steps 200   # hierarchical all-reduce via a hub
+    PYTHONPATH=src python examples/train_cross_region.py --mesh random_geo \
+        --workers 8 --dynamics 'diurnal:depth=0.6,hub_failure:start=80:dur=40' \
+        --steps 200          # generated 8-region mesh on time-varying links
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.network import SCENARIOS
+from repro.core.network import MESH_PROFILES, SCENARIOS
 from repro.launch.train import main as train_main
 
 
@@ -28,6 +31,13 @@ def main():
     ap.add_argument("--topology", default=None, choices=sorted(SCENARIOS),
                     help="heterogeneous WAN scenario (e.g. asym4 = asymmetric "
                          "4-region mesh with transpacific bottleneck)")
+    ap.add_argument("--mesh", default=None, choices=sorted(MESH_PROFILES),
+                    help="generated N-region mesh (N = --workers)")
+    ap.add_argument("--mesh-seed", type=int, default=0)
+    ap.add_argument("--dynamics", default=None,
+                    help="time-varying link spec, e.g. "
+                         "'diurnal:depth=0.6,hub_failure:start=80:dur=40'")
+    ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"])
     ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
                     help="segment-scanned execution engine vs per-step loop")
@@ -36,12 +46,13 @@ def main():
                     help="trainer_state_v1 checkpoint to continue from")
     ap.add_argument("--full-model", action="store_true")
     args = ap.parse_args()
-    tag = args.method if args.topology is None else f"{args.method}_{args.topology}"
+    net_tag = args.mesh and f"{args.mesh}{args.workers}" or args.topology
+    tag = args.method if net_tag is None else f"{args.method}_{net_tag}"
     argv = [
         "--arch", "paper_150m",
         "--method", args.method,
         "--steps", str(args.steps),
-        "--workers", "4",
+        "--workers", str(args.workers),
         "--H", "100", "--fragments", "4", "--tau", "5",
         "--local-batch", "4", "--seq-len", "64",
         "--eval-every", "50",
@@ -52,6 +63,10 @@ def main():
     ]
     if args.topology:
         argv.extend(["--topology", args.topology])
+    if args.mesh:
+        argv.extend(["--mesh", args.mesh, "--mesh-seed", str(args.mesh_seed)])
+    if args.dynamics:
+        argv.extend(["--dynamics", args.dynamics])
     if args.resume:
         argv.extend(["--resume", args.resume])
     if args.link_pricing:

@@ -150,6 +150,11 @@ class CoCoDCConfig:
     outer_lr: float = 0.7
     outer_momentum: float = 0.9    # Nesterov (DiLoCo defaults)
     strided_fragments: bool = True # Streaming DiLoCo strided layer->fragment pattern
+    # fragmentation strategy override: "" derives from strided_fragments
+    # ("strided"/"contiguous"); "skewed" builds size-skewed fragments
+    # (geometric byte shares) so per-fragment WAN costs differ enough for
+    # Algorithm-2 link pricing to flip selections (ROADMAP PR 2 finding)
+    fragment_strategy: str = ""
     # WAN payload dtype for the pseudo-gradient all-reduce. bf16 halves the
     # cross-region bytes (beyond-paper optimization, §Perf iteration 4);
     # outer-optimizer accumulation stays f32 either way.

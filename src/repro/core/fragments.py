@@ -1,9 +1,19 @@
 """Model fragmentation along depth (Streaming DiLoCo / CoCoDC).
 
 The model is partitioned into K disjoint fragments. Layer-stacked leaves (leading
-axis == a known layer count) are split by layer rows — strided (layer l -> fragment
-l % K, the Streaming DiLoCo pattern) or contiguous. Non-stacked leaves (embeddings,
-heads, norms) are assigned wholesale to fragments, greedily balancing fragment bytes.
+axis == a known layer count) are split by layer rows under a ``strategy``:
+
+  * "strided"    — layer l -> fragment l % K (the Streaming DiLoCo pattern)
+  * "contiguous" — equal consecutive blocks
+  * "skewed"     — size-skewed consecutive blocks: fragment p targets a
+    geometric byte share ∝ SKEW_RATIO**p (every fragment keeps >= 1 layer when
+    depth allows). Heterogeneous fragment sizes make per-fragment WAN costs
+    differ, which is what separates Eq. 12 from Algorithm-2 cost-aware
+    selection on heterogeneous topologies (ROADMAP PR 2 finding).
+
+Non-stacked leaves (embeddings, heads, norms) are assigned wholesale to
+fragments, greedily balancing fragment bytes (weighted by the same geometric
+targets under "skewed").
 
 The Fragmenter works on abstract shapes (eval_shape) so constructing it never
 allocates; extract/insert are pure jittable gathers/scatters with static indices.
@@ -35,12 +45,25 @@ class _LeafPlan:
 
 
 class Fragmenter:
+    STRATEGIES = ("strided", "contiguous", "skewed")
+    SKEW_RATIO = 0.55      # geometric byte share of fragment p ∝ SKEW_RATIO**p
+
     def __init__(self, params_shape: Any, n_fragments: int,
-                 layer_counts: Sequence[int], *, strided: bool = True):
+                 layer_counts: Sequence[int], *, strided: bool = True,
+                 strategy: str = ""):
         """params_shape: pytree of ShapeDtypeStruct (jax.eval_shape of init).
         layer_counts: leading-dim sizes that mark a leaf as layer-stacked
-        (e.g. {n_layers, n_groups, n_enc_layers})."""
+        (e.g. {n_layers, n_groups, n_enc_layers}). `strategy` overrides the
+        legacy `strided` flag when non-empty."""
         self.K = int(n_fragments)
+        if not strategy:
+            strategy = "strided" if strided else "contiguous"
+        if strategy not in self.STRATEGIES:
+            raise ValueError(f"unknown fragment strategy {strategy!r}; "
+                             f"options: {self.STRATEGIES}")
+        self.strategy = strategy
+        weights = (np.array([self.SKEW_RATIO ** p for p in range(self.K)])
+                   if strategy == "skewed" else np.ones(self.K))
         counts = {int(c) for c in layer_counts if int(c) > 1}
         leaves = jax.tree_util.tree_flatten_with_path(params_shape)[0]
         plans: List[_LeafPlan] = []
@@ -56,26 +79,52 @@ class Fragmenter:
                                                "rem", "groups"))
             if layered:
                 L = leaf.shape[0]
-                rows: List[List[int]] = [[] for _ in range(self.K)]
-                for l in range(L):
-                    frag = (l % self.K) if strided else min(l * self.K // L, self.K - 1)
-                    rows[frag].append(l)
+                rows = self._layer_rows(L)
                 per_row = nbytes // L
                 for f in range(self.K):
                     frag_bytes[f] += per_row * len(rows[f])
-                plans.append(_LeafPlan(p, True, tuple(tuple(r) for r in rows), None,
-                                       per_row, nbytes))
+                plans.append(_LeafPlan(p, True, rows, None, per_row, nbytes))
             else:
                 pending_flat.append((p, nbytes))
 
-        # pass 2: whole leaves, biggest first, to the lightest fragment
+        # pass 2: whole leaves, biggest first, to the (weight-relative)
+        # lightest fragment — uniform weights reproduce the legacy greedy
         for p, nbytes in sorted(pending_flat, key=lambda t: -t[1]):
-            owner = int(np.argmin(frag_bytes))
+            owner = int(np.argmin(frag_bytes / weights))
             frag_bytes[owner] += nbytes
             plans.append(_LeafPlan(p, False, None, owner, nbytes, nbytes))
 
         self._plans: Dict[str, _LeafPlan] = {pl.path: pl for pl in plans}
         self._frag_bytes = frag_bytes
+
+    def _layer_rows(self, L: int) -> Tuple[Tuple[int, ...], ...]:
+        """Per-fragment layer indices for an L-deep stacked leaf."""
+        K = self.K
+        if self.strategy == "strided":
+            rows = [[] for _ in range(K)]
+            for l in range(L):
+                rows[l % K].append(l)
+        elif self.strategy == "contiguous":
+            rows = [[] for _ in range(K)]
+            for l in range(L):
+                rows[min(l * K // L, K - 1)].append(l)
+        else:  # skewed: geometric consecutive block sizes, >=1 layer each
+            if L < K:
+                sizes = [1 if p < L else 0 for p in range(K)]
+            else:
+                w = np.array([self.SKEW_RATIO ** p for p in range(K)])
+                extra = (L - K) * w / w.sum()
+                base = np.floor(extra).astype(int)
+                order = sorted(range(K),
+                               key=lambda p: (-(extra[p] - base[p]), p))
+                for p in order[:int(L - K - base.sum())]:
+                    base[p] += 1
+                sizes = [1 + int(b) for b in base]
+            rows, off = [], 0
+            for s in sizes:
+                rows.append(list(range(off, off + s)))
+                off += s
+        return tuple(tuple(r) for r in rows)
 
     # -- interface ----------------------------------------------------------
 
@@ -148,8 +197,9 @@ class Fragmenter:
 
 
 def make_fragmenter(cfg_model, params_shape, n_fragments: int, *,
-                    strided: bool = True) -> Fragmenter:
+                    strided: bool = True, strategy: str = "") -> Fragmenter:
     counts = [cfg_model.n_layers, cfg_model.n_enc_layers]
     if cfg_model.block_pattern:
         counts.append(cfg_model.n_layers // len(cfg_model.block_pattern))
-    return Fragmenter(params_shape, n_fragments, counts, strided=strided)
+    return Fragmenter(params_shape, n_fragments, counts, strided=strided,
+                      strategy=strategy)

@@ -1,6 +1,6 @@
 """WAN network + compute model for the cross-region simulation.
 
-Two levels of fidelity:
+Three levels of fidelity:
 
 ``NetworkModel`` — the original single-link symmetric model (kept for
 back-compat and closed-form tests): one latency, one bandwidth, ring
@@ -13,20 +13,31 @@ WAN collectives (contention), and per-link traffic accounting. Fragment
 delivery times are derived from simulated transfer *completion* (initiation
 time + queueing + per-link bottleneck cost), not a fixed ``t + tau``.
 
-Both expose the same cost API used by the engines and Eq. 9:
-  * ``t_s(bytes)``   — one fragment all-reduce (wall seconds)
+``LinkDynamics`` — time-varying behavior layered on a Topology: piecewise
+diurnal bandwidth curves (per-region phase offsets), scheduled link
+degradation/outage windows (an outage pauses in-flight collectives; recovery
+pays the latency phases again — a retry), and seeded per-transfer jitter.
+``Topology.transfer_time`` integrates the bottleneck bandwidth over time, so a
+transfer that straddles a trough or an outage finishes late by exactly the
+bandwidth-seconds it lost. ``dynamics is None`` keeps the closed-form static
+path bitwise-unchanged (regression-pinned).
+
+All expose the same cost API used by the engines and Eq. 9:
+  * ``t_s(bytes)``   — one fragment all-reduce (wall seconds, nominal)
   * ``t_c``          — per-local-step compute time
   * ``tau_steps(b)`` — overlap depth implied by T_s/T_c
 
-Scenario constructors (``SCENARIOS``) cover the sweeps the scalar model could
-not express: asymmetric 4-region meshes, hub-and-spoke trees, transpacific
-bottlenecks, and flaky (degraded) links.
+Scenario constructors (``SCENARIOS``) cover fixed hand-built meshes;
+``generate_mesh`` (``MESH_PROFILES``: ring / hub_spoke / continental /
+random_geo) builds seeded N-region meshes for arbitrary N, and
+``apply_dynamics`` parses a ``"diurnal:...,hub_failure:...,jitter:..."`` spec
+string into a ``LinkDynamics`` attached to any Topology.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -81,6 +92,131 @@ def paper_network(num_workers: int = 4, *, step_time_s: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# time-varying link dynamics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkEvent:
+    """One scheduled degradation/outage window on a (optionally symmetric)
+    directed link: during [start_s, end_s) the link's bandwidth is multiplied
+    by ``bandwidth_factor`` (0.0 = outage) and ``extra_latency_s`` is added to
+    every latency phase that starts inside the window."""
+    start_s: float
+    end_s: float
+    src: int
+    dst: int
+    bandwidth_factor: float = 1.0
+    extra_latency_s: float = 0.0
+    symmetric: bool = True
+
+    def covers(self, i: int, j: int) -> bool:
+        return (i, j) == (self.src, self.dst) or (
+            self.symmetric and (i, j) == (self.dst, self.src))
+
+    def active(self, t: float) -> bool:
+        return self.start_s <= t < self.end_s
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalProfile:
+    """Piecewise-constant day/night bandwidth curve. The underlying cosine dips
+    to ``1 - trough_depth`` half a period after each region's local midnight
+    (``phase_s``), sampled at ``n_bins`` bins per period so the time
+    integration is exact and resume-deterministic. A link's phase is the mean
+    of its endpoint regions' phases (congestion follows both ends)."""
+    period_s: float = 240.0
+    trough_depth: float = 0.5
+    n_bins: int = 24
+    phase_s: Tuple[float, ...] = ()      # per-region offsets; () = synchronized
+
+    def link_phase(self, i: int, j: int) -> float:
+        if not self.phase_s:
+            return 0.0
+        return 0.5 * (self.phase_s[i] + self.phase_s[j])
+
+    def factor(self, i: int, j: int, t: float) -> float:
+        """Bandwidth multiplier for link (i, j) at wall-time t (bin-sampled)."""
+        phase = self.link_phase(i, j)
+        u = ((t - phase) / self.period_s) % 1.0
+        center = (math.floor(u * self.n_bins) + 0.5) / self.n_bins
+        return 1.0 - self.trough_depth * (0.5 - 0.5 * math.cos(
+            2.0 * math.pi * center))
+
+    def next_edge(self, i: int, j: int, t: float) -> float:
+        """First bin boundary strictly after t for link (i, j)."""
+        w = self.period_s / self.n_bins
+        phase = self.link_phase(i, j)
+        k = math.floor((t - phase) / w + 1e-9) + 1
+        return phase + k * w
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDynamics:
+    """Time-varying behavior of a Topology's links: a diurnal bandwidth curve,
+    scheduled degradation/outage events, and seeded per-transfer jitter.
+
+    Everything is a pure function of wall-time plus a caller-owned draw
+    counter (``jitter_mult(seq)``), so a resumed run that restores the
+    scheduler's clocks (channel frees + the jitter sequence counter) replays
+    the exact same transfer completions — no hidden RNG state."""
+    diurnal: Optional[DiurnalProfile] = None
+    events: Tuple[LinkEvent, ...] = ()
+    jitter_frac: float = 0.0
+    seed: int = 0
+    retry_latency: bool = True    # outage interruption re-pays latency phases
+
+    @property
+    def is_trivial(self) -> bool:
+        return (self.diurnal is None and not self.events
+                and self.jitter_frac == 0.0)
+
+    # --------------------------------------------------------- point queries
+
+    def bw_factor(self, i: int, j: int, t: float) -> float:
+        f = self.diurnal.factor(i, j, t) if self.diurnal else 1.0
+        for ev in self.events:
+            if ev.covers(i, j) and ev.active(t):
+                f *= ev.bandwidth_factor
+        return f
+
+    def extra_latency_s(self, i: int, j: int, t: float) -> float:
+        out = 0.0
+        for ev in self.events:
+            if ev.covers(i, j) and ev.active(t):
+                out += ev.extra_latency_s
+        return out
+
+    def jitter_mult(self, seq: int) -> float:
+        """Deterministic per-transfer bandwidth-work multiplier: the `seq`-th
+        transfer always draws the same jitter for a given seed (counter-based,
+        stateless — the counter itself is serialized by the scheduler)."""
+        if self.jitter_frac <= 0.0:
+            return 1.0
+        u = np.random.default_rng(
+            np.random.SeedSequence([int(self.seed) & 0x7FFFFFFF, int(seq)])
+        ).uniform(-1.0, 1.0)
+        return float(1.0 + self.jitter_frac * u)
+
+    # ------------------------------------------------------ piecewise change
+
+    def next_change(self, links: Sequence[Tuple[int, int]],
+                    t: float) -> Optional[float]:
+        """Earliest time strictly after t at which any used link's factor can
+        change (diurnal bin edge or event boundary). None = constant forever."""
+        nxt = math.inf
+        if self.diurnal is not None:
+            for i, j in links:
+                nxt = min(nxt, self.diurnal.next_edge(i, j, t))
+        for ev in self.events:
+            if any(ev.covers(i, j) for i, j in links):
+                for edge in (ev.start_s, ev.end_s):
+                    if edge > t:
+                        nxt = min(nxt, edge)
+        return None if math.isinf(nxt) else nxt
+
+
+# ---------------------------------------------------------------------------
 # heterogeneous topology
 # ---------------------------------------------------------------------------
 
@@ -97,7 +233,9 @@ class Topology:
                          slowest spoke link (concurrent spoke transfers).
     ``concurrent_collectives`` bounds how many fragment all-reduces the WAN
     carries at once; the engine queues the excess (contention -> later
-    delivery). Mutable transfer-schedule state lives in the engine, not here.
+    delivery). ``dynamics`` (optional) makes the links time-varying — see
+    ``transfer_time``; None keeps the closed-form static path byte-for-byte.
+    Mutable transfer-schedule state lives in the engine, not here.
     """
     latency_s: np.ndarray
     bandwidth_Bps: np.ndarray
@@ -106,6 +244,7 @@ class Topology:
     collective: str = "ring"
     hub: int = 0
     concurrent_collectives: int = 1
+    dynamics: Optional[LinkDynamics] = None
 
     def __post_init__(self):
         lat = np.asarray(self.latency_s, dtype=np.float64)
@@ -178,6 +317,78 @@ class Topology:
     def tau_steps(self, nbytes: int) -> int:
         return max(1, math.ceil(self.t_s(nbytes) / self.t_c))
 
+    # ------------------------------------------- time-integrated transfers
+
+    @property
+    def n_latency_phases(self) -> int:
+        """Latency phases one collective pays (ring: 2(M-1) hops; hierarchical:
+        gather + broadcast)."""
+        m = self.num_workers
+        if m <= 1:
+            return 0
+        return 2 * (m - 1) if self.collective == "ring" else 2
+
+    def _dyn_latency(self, links, t: float) -> float:
+        """Event-driven extra latency for phases starting at wall-time t."""
+        dyn = self.dynamics
+        if dyn is None or not dyn.events:
+            return 0.0
+        extra = max((dyn.extra_latency_s(i, j, t) for i, j in links),
+                    default=0.0)
+        return self.n_latency_phases * extra
+
+    def transfer_time(self, nbytes: int, start: float, *,
+                      jitter: float = 1.0) -> Tuple[float, float, int]:
+        """Simulate one collective of `nbytes` starting at wall-time `start`
+        under ``self.dynamics``: integrates the bottleneck bandwidth factor
+        (min over the collective's links) through diurnal bins and event
+        windows. An outage (factor 0) pauses the transfer; on recovery the
+        collective re-establishes and pays its latency phases again (a retry).
+
+        Returns ``(finish_time, nominal_t_s, n_retries)``. With
+        ``dynamics=None`` this is exactly ``start + t_s(nbytes)``.
+        """
+        nominal = self.allreduce_time(nbytes)
+        dyn = self.dynamics
+        if dyn is None:
+            return start + nominal, nominal, 0
+        links = self._links()
+        if not links:
+            return start + nominal, nominal, 0
+        lat = self.allreduce_time(0)            # latency phases (fixed part)
+        work = (nominal - lat) * jitter         # bandwidth-seconds to serve
+        t = start + lat + self._dyn_latency(links, start)
+        n_retries = 0
+        in_outage = False
+        for _ in range(1_000_000):
+            rho = min(dyn.bw_factor(i, j, t) for i, j in links)
+            nxt = dyn.next_change(links, t)
+            if rho <= 0.0:                       # outage: wait for recovery
+                if nxt is None:
+                    raise RuntimeError(
+                        f"transfer started at {start:.3f}s hit a permanent "
+                        f"outage at {t:.3f}s (no future dynamics change)")
+                t = nxt
+                in_outage = True                 # one retry per RECOVERY, not
+                continue                         # per bin edge inside the dark
+            if in_outage:                        # window
+                in_outage = False
+                n_retries += 1
+                if dyn.retry_latency:
+                    t += lat + self._dyn_latency(links, t)
+                    continue                     # latency may cross an edge
+            if work <= 0.0:
+                break
+            if nxt is None or work <= (nxt - t) * rho:
+                t += work / rho
+                break
+            work -= (nxt - t) * rho
+            t = nxt
+        else:
+            raise RuntimeError("transfer_time did not converge "
+                               "(pathological dynamics spec)")
+        return t, nominal, n_retries
+
     # ------------------------------------------------------ per-link traffic
 
     def link_bytes(self, nbytes: int) -> np.ndarray:
@@ -228,6 +439,10 @@ class Topology:
             lat[a, b] += extra_latency_s
             bw[a, b] *= bandwidth_factor
         return dataclasses.replace(self, latency_s=lat, bandwidth_Bps=bw)
+
+    def with_dynamics(self, dynamics: Optional[LinkDynamics]) -> "Topology":
+        """Attach (or clear) a time-varying dynamics layer."""
+        return dataclasses.replace(self, dynamics=dynamics)
 
     # ----------------------------------------------------------- constructors
 
@@ -337,3 +552,254 @@ def make_scenario(name: str, *, num_workers: int = 4,
                              f"(got num_workers={num_workers})")
         return fn(step_time_s=step_time_s, **kw)
     return fn(num_workers, step_time_s=step_time_s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# generated N-region meshes
+# ---------------------------------------------------------------------------
+
+
+def _mesh_rng(seed: int, tag: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed & 0x7FFFFFFF,
+                                                         tag]))
+
+
+def _ring_mesh(n: int, rng: np.random.Generator, step_time_s: float) -> Topology:
+    """Regions on a WAN ring: neighbor links drawn from realistic one-way
+    latency / backbone bandwidth ranges; non-adjacent pairs priced as the
+    multi-hop shortest path (sum latency, min bandwidth) so hierarchical
+    collectives over the same mesh stay meaningful."""
+    nb_lat = rng.uniform(0.02, 0.08, n)         # region i <-> i+1
+    nb_bw = rng.uniform(5.0, 25.0, n) * 0.125e9
+    lat = np.zeros((n, n))
+    bw = np.full((n, n), np.inf)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            fwd = [(k % n) for k in range(i, i + (j - i) % n)]
+            bwd = [(k % n) for k in range(j, j + (i - j) % n)]
+            hops = fwd if len(fwd) <= len(bwd) else bwd
+            lat[i, j] = sum(nb_lat[h] for h in hops)
+            bw[i, j] = min(nb_bw[h] for h in hops)
+    return Topology(latency_s=lat, bandwidth_Bps=bw, step_time_s=step_time_s,
+                    regions=tuple(f"ring{i}" for i in range(n)))
+
+
+def _hub_spoke_mesh(n: int, rng: np.random.Generator,
+                    step_time_s: float) -> Topology:
+    """Regional DCs homed to a central hub (hierarchical collective): seeded
+    heterogeneous spoke links; spoke<->spoke goes through the hub."""
+    sp_lat = rng.uniform(0.015, 0.09, n)
+    sp_bw = rng.uniform(4.0, 40.0, n) * 0.125e9
+    lat = np.zeros((n, n))
+    bw = np.full((n, n), np.inf)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            if i == 0 or j == 0:
+                k = max(i, j)
+                lat[i, j] = sp_lat[k]
+                bw[i, j] = sp_bw[k]
+            else:
+                lat[i, j] = sp_lat[i] + sp_lat[j]
+                bw[i, j] = min(sp_bw[i], sp_bw[j])
+    return Topology(latency_s=lat, bandwidth_Bps=bw, step_time_s=step_time_s,
+                    collective="hierarchical", hub=0,
+                    regions=tuple(["hub"] + [f"spoke{i}"
+                                             for i in range(1, n)]))
+
+
+def _continental_mesh(n: int, rng: np.random.Generator,
+                      step_time_s: float) -> Topology:
+    """Clustered continents: fast fat intra-continent links, slow thin
+    inter-continent crossings (the submarine-cable pattern DiLoCoX-style
+    decentralized clusters see). Continents get near-equal region counts."""
+    n_cont = max(2, min(4, round(math.sqrt(n))))
+    cont = np.array([i * n_cont // n for i in range(n)])
+    cont_lat = rng.uniform(0.05, 0.14, (n_cont, n_cont))
+    cont_lat = (cont_lat + cont_lat.T) / 2
+    cont_bw = rng.uniform(1.5, 8.0, (n_cont, n_cont)) * 0.125e9
+    cont_bw = (cont_bw + cont_bw.T) / 2
+    lat = np.zeros((n, n))
+    bw = np.full((n, n), np.inf)
+    names = []
+    tags = ("na", "eu", "ap", "sa")
+    for i in range(n):
+        names.append(f"{tags[cont[i]]}{i}")
+        for j in range(n):
+            if i == j:
+                continue
+            if cont[i] == cont[j]:
+                lat[i, j] = rng.uniform(0.004, 0.02)
+                bw[i, j] = rng.uniform(40.0, 100.0) * 0.125e9
+            else:
+                lat[i, j] = cont_lat[cont[i], cont[j]]
+                bw[i, j] = cont_bw[cont[i], cont[j]]
+    lat = (lat + lat.T) / 2
+    finite = np.isfinite(bw)
+    bws = np.where(finite, bw, 0.0)
+    bw = np.where(finite, (bws + bws.T) / 2, np.inf)
+    return Topology(latency_s=lat, bandwidth_Bps=bw, step_time_s=step_time_s,
+                    regions=tuple(names))
+
+
+def _random_geo_mesh(n: int, rng: np.random.Generator,
+                     step_time_s: float) -> Topology:
+    """Regions at seeded random points on a unit globe-patch: latency scales
+    with great-circle-ish distance, bandwidth decays with distance times a
+    lognormal capacity draw (far pairs are thin AND slow)."""
+    xy = rng.uniform(0.0, 1.0, (n, 2))
+    cap = np.exp(rng.normal(0.0, 0.4, (n, n)))
+    cap = (cap + cap.T) / 2
+    d = np.linalg.norm(xy[:, None, :] - xy[None, :, :], axis=-1)
+    lat = 0.005 + 0.12 * d
+    np.fill_diagonal(lat, 0.0)
+    with np.errstate(divide="ignore"):
+        bw = 20.0 * 0.125e9 * cap / (0.35 + d)
+    np.fill_diagonal(bw, np.inf)
+    return Topology(latency_s=lat, bandwidth_Bps=bw, step_time_s=step_time_s,
+                    regions=tuple(f"geo{i}" for i in range(n)))
+
+
+MESH_PROFILES: Dict[str, Callable[..., Topology]] = {
+    "ring": _ring_mesh,
+    "hub_spoke": _hub_spoke_mesh,
+    "continental": _continental_mesh,
+    "random_geo": _random_geo_mesh,
+}
+
+# PERMANENT per-profile RNG stream tags: a profile's tag may never change and
+# a retired tag may never be reused, or every existing (profile, n, seed) mesh
+# — and any run/sweep/checkpoint built on one — silently changes. New
+# profiles take the next unused integer.
+_PROFILE_STREAM_TAGS = {"continental": 0, "hub_spoke": 1, "random_geo": 2,
+                        "ring": 3}
+
+
+def generate_mesh(n_regions: int, profile: str = "random_geo", seed: int = 0,
+                  *, step_time_s: float = 1.0) -> Topology:
+    """Seeded N-region mesh for any N >= 1. Same (profile, n, seed) always
+    yields the identical Topology (matrices drawn from a dedicated PCG64
+    stream), so sweeps and resumed runs agree on the network."""
+    if profile not in MESH_PROFILES:
+        raise KeyError(f"unknown mesh profile {profile!r}; "
+                       f"options: {sorted(MESH_PROFILES)}")
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    tag = _PROFILE_STREAM_TAGS[profile]
+    return MESH_PROFILES[profile](n_regions, _mesh_rng(seed, tag),
+                                  step_time_s)
+
+
+# ---------------------------------------------------------------------------
+# dynamics spec parsing ("diurnal:depth=0.6,hub_failure:start=40:dur=24,...")
+# ---------------------------------------------------------------------------
+
+
+DYNAMICS_KINDS = ("diurnal", "hub_failure", "flaky", "degrade", "jitter")
+
+
+def _hub_of(topo: Topology) -> int:
+    """Hub region for hub_failure: the declared hub for hierarchical
+    collectives, else the best-connected region (largest total egress)."""
+    if topo.collective == "hierarchical":
+        return topo.hub
+    bw = np.where(np.isfinite(topo.bandwidth_Bps), topo.bandwidth_Bps, 0.0)
+    return int(np.argmax(bw.sum(axis=1)))
+
+
+def _slowest_link(topo: Topology) -> Tuple[int, int]:
+    """Thinnest link the collective actually traverses (degrading an unused
+    link would be invisible)."""
+    links = topo._links()
+    return min(links, key=lambda ij: (topo.bandwidth_Bps[ij], ij))
+
+
+def parse_dynamics(spec: str, topo: Topology, *, seed: int = 0) -> LinkDynamics:
+    """Parse a comma-separated dynamics spec into one LinkDynamics. Each entry
+    is ``kind[:key=val]*``; times are simulated seconds. Kinds:
+
+      diurnal      period (240*T_c), depth (0.5), bins (24), stagger (1.0)
+                   — bandwidth trough once per period; stagger spreads region
+                   phases across the period (1.0 = evenly spaced timezones)
+      hub_failure  start (40*T_c), dur (24*T_c), hub (auto), factor (0.0)
+                   — every link touching the hub degrades/goes dark
+      flaky        n (4), dur (8*T_c), factor (0.2), start (10*T_c),
+                   span (12*n*dur), link ("i-j", default: thinnest used link)
+                   — n seeded random degradation windows on one link
+      degrade      start, dur, link ("i-j"), factor (0.3), lat (0.0)
+                   — one explicit degradation window
+      jitter       frac (0.05) — seeded per-transfer bandwidth jitter
+    """
+    tc = topo.step_time_s
+    m = topo.num_workers
+    diurnal: Optional[DiurnalProfile] = None
+    events: List[LinkEvent] = []
+    jitter_frac = 0.0
+
+    def _link_kw(kw) -> Tuple[int, int]:
+        if "link" in kw:
+            i, j = kw["link"].split("-")
+            return int(i), int(j)
+        return _slowest_link(topo)
+
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        bits = part.split(":")
+        kind, kw = bits[0], dict(b.split("=", 1) for b in bits[1:])
+        if kind == "diurnal":
+            period = float(kw.get("period", 240 * tc))
+            stagger = float(kw.get("stagger", 1.0))
+            phases = tuple(stagger * period * i / m for i in range(m))
+            diurnal = DiurnalProfile(
+                period_s=period,
+                trough_depth=float(kw.get("depth", 0.5)),
+                n_bins=int(kw.get("bins", 24)),
+                phase_s=phases if stagger else ())
+        elif kind == "hub_failure":
+            hub = int(kw["hub"]) if "hub" in kw else _hub_of(topo)
+            start = float(kw.get("start", 40 * tc))
+            end = start + float(kw.get("dur", 24 * tc))
+            factor = float(kw.get("factor", 0.0))
+            for j in range(m):
+                if j != hub:
+                    events.append(LinkEvent(start, end, hub, j,
+                                            bandwidth_factor=factor))
+        elif kind == "flaky":
+            i, j = _link_kw(kw)
+            n = int(kw.get("n", 4))
+            dur = float(kw.get("dur", 8 * tc))
+            start = float(kw.get("start", 10 * tc))
+            span = float(kw.get("span", 12 * n * dur))
+            rng = np.random.default_rng(
+                np.random.SeedSequence([seed & 0x7FFFFFFF, 0xF1A]))
+            for s in sorted(rng.uniform(start, start + span, n)):
+                events.append(LinkEvent(float(s), float(s) + dur, i, j,
+                                        bandwidth_factor=float(
+                                            kw.get("factor", 0.2))))
+        elif kind == "degrade":
+            i, j = _link_kw(kw)
+            start = float(kw.get("start", 0.0))
+            events.append(LinkEvent(start, start + float(kw.get("dur", 24 * tc)),
+                                    i, j,
+                                    bandwidth_factor=float(kw.get("factor", 0.3)),
+                                    extra_latency_s=float(kw.get("lat", 0.0))))
+        elif kind == "jitter":
+            jitter_frac = float(kw.get("frac", 0.05))
+        else:
+            raise KeyError(f"unknown dynamics kind {kind!r}; "
+                           f"options: {DYNAMICS_KINDS}")
+    return LinkDynamics(diurnal=diurnal, events=tuple(events),
+                        jitter_frac=jitter_frac, seed=seed)
+
+
+def apply_dynamics(topo: Topology, spec: "str | LinkDynamics | None", *,
+                   seed: int = 0) -> Topology:
+    """Attach dynamics to a Topology: a spec string (parsed), a ready
+    LinkDynamics, or None (no-op)."""
+    if spec is None:
+        return topo
+    if isinstance(spec, LinkDynamics):
+        return topo.with_dynamics(spec)
+    return topo.with_dynamics(parse_dynamics(spec, topo, seed=seed))

@@ -26,6 +26,15 @@ slowest inter-region link of the collective (ring or hierarchical). Under the
 symmetric paper-calibrated network with a free channel this reduces exactly to
 the paper's `t + tau`.
 
+When the topology carries a `LinkDynamics` layer, a transfer's completion is
+the time-INTEGRAL of the bottleneck bandwidth factor (diurnal troughs, outage
+windows with retry, seeded per-transfer jitter) — see
+`Topology.transfer_time`. The engine then also accounts `stall_seconds` (time
+lost vs the nominal static cost) and `n_retries`, and owns the jitter draw
+counter so checkpoint/resume replays the identical transfer schedule.
+`dynamics=None` follows the original static arithmetic bitwise (pinned by
+tests/test_network_dynamics.py).
+
 The cross-pod mean over the worker axis is the ONLY cross-region collective;
 under the multi-pod mesh it lowers to an all-reduce over the `pod` axis
 (verified in the dry-run).
@@ -111,6 +120,10 @@ class ProtocolEngine:
         m = self.M
         self.link_bytes = np.zeros((m, m), dtype=np.float64)
         self.link_seconds = np.zeros((m, m), dtype=np.float64)
+        # dynamic-topology clocks/accounting (stay zero on static topologies)
+        self._dyn_seq = 0            # per-transfer jitter draw counter
+        self.stall_seconds = 0.0     # time lost vs nominal static transfer cost
+        self.n_retries = 0           # outage-interrupted collective restarts
 
     # ------------------------------------------------------------ properties
 
@@ -174,19 +187,39 @@ class ProtocolEngine:
     def _schedule_transfer(self, nbytes: int) -> float:
         """Queue one collective of `nbytes` (raw f32) on the WAN: applies the
         wire format, grabs the earliest-free channel, accounts per-link
-        traffic. Returns the simulated completion wall-time."""
+        traffic. Returns the simulated completion wall-time.
+
+        Static topologies keep the original closed-form arithmetic bitwise;
+        with `Topology.dynamics` the finish time integrates the time-varying
+        bottleneck bandwidth (and the engine-owned `_dyn_seq` counter makes
+        per-transfer jitter a pure function of serialized state)."""
         wire = self._wire_bytes(nbytes)
-        t_s = self.topology.t_s(wire)
         ch = min(range(len(self._channel_free)),
                  key=lambda i: self._channel_free[i])
         start = max(self.wall_clock, self._channel_free[ch])
-        finish = start + t_s
+        dyn = self.topology.dynamics
+        if dyn is None:
+            t_s = self.topology.t_s(wire)
+            finish = start + t_s
+            self.comm_seconds += t_s
+            self.link_seconds += self.topology.link_seconds(wire)
+        else:
+            jitter = dyn.jitter_mult(self._dyn_seq)
+            self._dyn_seq += 1
+            finish, nominal, retries = self.topology.transfer_time(
+                wire, start, jitter=jitter)
+            self.n_retries += retries
+            self.stall_seconds += max(0.0, (finish - start) - nominal)
+            self.comm_seconds += finish - start   # actual WAN occupancy
+            # per-link busy-seconds scale with the ACTUAL duration (stall
+            # attributed proportionally across the collective's links), so
+            # link accounting reconciles with comm_seconds
+            scale = (finish - start) / nominal if nominal > 0 else 1.0
+            self.link_seconds += self.topology.link_seconds(wire) * scale
         self._channel_free[ch] = finish
-        self.comm_seconds += t_s
         self.bytes_sent += wire
         self.n_syncs += 1
         self.link_bytes += self.topology.link_bytes(wire)
-        self.link_seconds += self.topology.link_seconds(wire)
         return finish
 
     def _deliver_step_for(self, t: int, finish_time: float) -> int:
@@ -295,6 +328,11 @@ class ProtocolEngine:
             "worker_available": [bool(x) for x in self.worker_available],
             "link_bytes": self.link_bytes,
             "link_seconds": self.link_seconds,
+            # dynamics clocks: the jitter draw counter + stall/retry tallies
+            # (exact mid-transfer resume on time-varying links needs these)
+            "dyn_seq": self._dyn_seq,
+            "stall_seconds": self.stall_seconds,
+            "n_retries": self.n_retries,
         }
 
     def restore_scheduler(self, st: Dict[str, object]):
@@ -311,6 +349,10 @@ class ProtocolEngine:
         self.worker_available = [bool(x) for x in st["worker_available"]]
         self.link_bytes = np.asarray(st["link_bytes"], dtype=np.float64)
         self.link_seconds = np.asarray(st["link_seconds"], dtype=np.float64)
+        # absent in pre-dynamics checkpoints (static runs never advance them)
+        self._dyn_seq = int(st.get("dyn_seq", 0))
+        self.stall_seconds = float(st.get("stall_seconds", 0.0))
+        self.n_retries = int(st.get("n_retries", 0))
 
     # ---------------------------------------------------------------- stats
 
@@ -325,6 +367,10 @@ class ProtocolEngine:
             "target_syncs_N": float(self.N),
             "busiest_link_bytes": float(self.link_bytes.max(initial=0.0)),
             "busiest_link_seconds": float(self.link_seconds.max(initial=0.0)),
+            "stall_seconds": float(self.stall_seconds),
+            "stall_fraction": float(0.0 if self.comm_seconds == 0 else
+                                    self.stall_seconds / self.comm_seconds),
+            "n_retries": float(self.n_retries),
         }
 
     def link_stats(self) -> Dict[str, object]:

@@ -34,7 +34,8 @@ from repro.checkpoint.io import load_pytree, restore_like, save_pytree
 from repro.configs.base import CoCoDCConfig, ModelConfig
 from repro.core import engine_state as es
 from repro.core.fragments import make_fragmenter
-from repro.core.network import NetworkModel, Topology, paper_network
+from repro.core.network import (NetworkModel, Topology, apply_dynamics,
+                                as_topology, paper_network)
 from repro.core.protocol import ProtocolEngine
 from repro.data.pipeline import (MarkovCorpus, make_worker_streams,
                                  stacked_batch, stacked_segment)
@@ -119,7 +120,13 @@ class SegmentRunner:
     dispatched as DESCENDING POWER-OF-TWO chunks (13 -> 8+4+1): the compiled-
     program set is bounded by log2(max segment), and since quiet steps carry no
     protocol interaction, the chunked scan is bitwise-identical to one fused
-    scan (and to the per-step loop — pinned by tests/test_trainer_segments)."""
+    scan (and to the per-step loop — pinned by tests/test_trainer_segments).
+
+    On non-CPU backends the scan carry (params stack + inner optimizer) is
+    DONATED to each chunk dispatch, so the buffers are updated in place instead
+    of being copied per chunk; the caller always rebinds to the returned carry.
+    CPU jit does not support donation (XLA warns and ignores it), so the flag
+    is gated on the backend."""
 
     def __init__(self, single_step):
         vstep = jax.vmap(single_step, in_axes=(0, 0, 0, None))
@@ -134,7 +141,8 @@ class SegmentRunner:
                 body, (params_stack, opt_state), (batch_seg, lrs))
             return p, o, losses          # losses: (n, M)
 
-        self._fn = jax.jit(run_segment)
+        donate = () if jax.default_backend() == "cpu" else (0, 1)
+        self._fn = jax.jit(run_segment, donate_argnums=donate)
 
     def __call__(self, params_stack, opt_state, batch_seg, lrs):
         n = int(lrs.shape[0])
@@ -155,7 +163,8 @@ class SegmentRunner:
 class CrossRegionTrainer:
     def __init__(self, model_cfg: ModelConfig, ccfg: CoCoDCConfig,
                  tcfg: TrainerConfig,
-                 network: Optional["NetworkModel | Topology"] = None):
+                 network: Optional["NetworkModel | Topology"] = None,
+                 dynamics: Optional[str] = None, dynamics_seed: int = 0):
         self.mcfg = model_cfg
         self.ccfg = ccfg
         self.tcfg = tcfg
@@ -169,11 +178,17 @@ class CrossRegionTrainer:
 
         shape = jax.eval_shape(lambda: params)
         self.fragmenter = make_fragmenter(model_cfg, shape, ccfg.num_fragments,
-                                          strided=ccfg.strided_fragments)
+                                          strided=ccfg.strided_fragments,
+                                          strategy=ccfg.fragment_strategy)
         if network is None:
             network = paper_network(
                 M, fragment_bytes=self.fragmenter.total_bytes // ccfg.num_fragments,
                 tau=ccfg.overlap_depth)
+        if dynamics:
+            # time-varying links apply to ANY base topology, incl. the
+            # calibrated symmetric default (seeded -> deterministic resume)
+            network = apply_dynamics(as_topology(network), dynamics,
+                                     seed=dynamics_seed)
         self.network = network
         self.engine = ProtocolEngine(tcfg.method, ccfg, self.fragmenter, network,
                                      self.params_stack,
@@ -398,7 +413,15 @@ class CrossRegionTrainer:
                 "seq_len": t.seq_len, "noniid_frac": t.noniid_frac,
                 "num_workers": c.num_workers, "local_steps": c.local_steps,
                 "num_fragments": c.num_fragments,
-                "overlap_depth": c.overlap_depth}
+                "overlap_depth": c.overlap_depth,
+                "fragment_strategy": self.fragmenter.strategy}
+
+    def _traj_meta_defaults(self) -> Dict[str, Any]:
+        """Meta keys added after trainer_state_v1 shipped: a checkpoint
+        written before a key existed implies whatever the key-less code did
+        with THIS config (pre-PR3 fragmentation came from strided_fragments)."""
+        return {"fragment_strategy":
+                "strided" if self.ccfg.strided_fragments else "contiguous"}
 
     def save_checkpoint(self, path: str):
         save_pytree(path, self.checkpoint_state())
@@ -414,8 +437,9 @@ class CrossRegionTrainer:
         if st.get("format") != CKPT_FORMAT:
             raise ValueError(f"not a {CKPT_FORMAT} checkpoint: {path}")
         meta = st["meta"]
+        defaults = self._traj_meta_defaults()
         for k, want in (("arch", self.mcfg.name), *self._traj_meta().items()):
-            if meta.get(k) != want:
+            if meta.get(k, defaults.get(k)) != want:
                 raise ValueError(
                     f"checkpoint {k}={meta.get(k)!r} != trainer {want!r} — "
                     f"resume requires the saved run's config (data streams, LR "

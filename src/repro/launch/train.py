@@ -17,7 +17,8 @@ import sys
 import time
 
 from repro.configs import CoCoDCConfig, get_config
-from repro.core.network import SCENARIOS, make_scenario
+from repro.core.network import (MESH_PROFILES, SCENARIOS, generate_mesh,
+                                make_scenario)
 from repro.core.trainer import CrossRegionTrainer, TrainerConfig
 
 
@@ -29,20 +30,28 @@ def build(args):
         num_workers=args.workers, local_steps=args.H,
         num_fragments=args.fragments, overlap_depth=args.tau,
         comp_lambda=args.comp_lambda, net_utilization=args.gamma,
-        mixing_alpha=args.alpha, link_pricing=args.link_pricing)
+        mixing_alpha=args.alpha, link_pricing=args.link_pricing,
+        fragment_strategy=args.fragment_strategy)
     tcfg = TrainerConfig(
         method=args.method, local_batch=args.local_batch, seq_len=args.seq_len,
         total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
         seed=args.seed, inner_lr=args.lr, engine_impl=args.engine_impl,
         loop=args.loop)
     network = None
-    if args.topology is not None:
+    if args.mesh is not None:
+        if args.topology is not None:
+            raise SystemExit("--mesh and --topology are mutually exclusive")
+        network = generate_mesh(args.workers, args.mesh, seed=args.mesh_seed,
+                                step_time_s=args.step_time)
+    elif args.topology is not None:
         # "paper" keeps the calibrated-symmetric default (network=None) so the
         # fragment-size calibration in CrossRegionTrainer still applies
         if args.topology != "paper":
             network = make_scenario(args.topology, num_workers=args.workers,
                                     step_time_s=args.step_time)
-    return CrossRegionTrainer(mcfg, ccfg, tcfg, network=network)
+    return CrossRegionTrainer(mcfg, ccfg, tcfg, network=network,
+                              dynamics=args.dynamics,
+                              dynamics_seed=args.mesh_seed)
 
 
 def main(argv=None):
@@ -68,8 +77,22 @@ def main(argv=None):
     ap.add_argument("--topology", default=None, choices=sorted(SCENARIOS),
                     help="heterogeneous WAN scenario (default: calibrated "
                          "symmetric paper network)")
+    ap.add_argument("--mesh", default=None, choices=sorted(MESH_PROFILES),
+                    help="generated N-region mesh profile (N = --workers); "
+                         "mutually exclusive with --topology")
+    ap.add_argument("--mesh-seed", type=int, default=0,
+                    help="seed for --mesh generation and --dynamics draws")
+    ap.add_argument("--dynamics", default=None,
+                    help="time-varying link dynamics spec, e.g. "
+                         "'diurnal:period=240:depth=0.6,hub_failure:start=100:"
+                         "dur=50,jitter:frac=0.05' (see "
+                         "repro.core.network.parse_dynamics)")
+    ap.add_argument("--fragment-strategy", default="",
+                    choices=["", "strided", "contiguous", "skewed"],
+                    help="model fragmentation strategy ('' = strided)")
     ap.add_argument("--step-time", type=float, default=1.0,
-                    help="T_c seconds per local step for --topology scenarios")
+                    help="T_c seconds per local step for --topology/--mesh "
+                         "scenarios")
     ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"],
                     help="jitted EngineState transitions vs eager host path")
     ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
@@ -130,6 +153,10 @@ def main(argv=None):
     link_stats = trainer.engine.link_stats()
     print(f"done in {dt:.1f}s host-time; simulated wall {stats['wall_clock_s']:.0f}s;"
           f" comm hidden {stats['overlap_ratio']*100:.0f}%", flush=True)
+    if stats.get("stall_seconds"):
+        print(f"dynamic links: stalled {stats['stall_seconds']:.1f}s "
+              f"({stats['stall_fraction']*100:.0f}% of WAN time), "
+              f"{int(stats['n_retries'])} outage retries", flush=True)
     if link_stats["links"]:
         print("per-link WAN traffic:", flush=True)
         for link, rec in sorted(link_stats["links"].items()):

@@ -190,6 +190,41 @@ def test_run_ckpt_every_saves_at_boundaries(tmp_path):
     assert st["meta"]["method"] == "cocodc"
 
 
+def test_restore_legacy_meta_respects_config_fragment_layout(tmp_path):
+    """Pre-PR3 checkpoints have no fragment_strategy meta key: the implied
+    default must come from the config that wrote them (strided_fragments),
+    so a contiguous-fragment run's checkpoint still resumes (code-review
+    finding) — while a genuinely mismatched strategy is still rejected."""
+    ck = os.path.join(tmp_path, "legacy.msgpack")
+
+    def contiguous_trainer():
+        mcfg = dataclasses.replace(get_config("paper_150m").reduced(),
+                                   compute_dtype="float32")
+        ccfg = CoCoDCConfig(num_workers=2, local_steps=8, num_fragments=2,
+                            overlap_depth=2, strided_fragments=False)
+        tcfg = TrainerConfig(method="cocodc", local_batch=2, seq_len=16,
+                             total_steps=8, warmup_steps=4, inner_lr=3e-3,
+                             eval_batch=4, seed=0)
+        return CrossRegionTrainer(mcfg, ccfg, tcfg)
+
+    tr = contiguous_trainer()
+    tr.run(eval_every=8, log=lambda s: None)
+    state = tr.checkpoint_state()
+    assert state["meta"]["fragment_strategy"] == "contiguous"
+    legacy = {**state, "meta": {k: v for k, v in state["meta"].items()
+                                if k != "fragment_strategy"}}
+    from repro.checkpoint import save_pytree
+    save_pytree(ck, legacy)                       # simulate a pre-PR3 file
+
+    resumed = contiguous_trainer().restore_checkpoint(ck)
+    assert resumed.step == tr.step
+    # a NEW checkpoint carries the key, so a genuine mismatch is rejected
+    ck2 = os.path.join(tmp_path, "new.msgpack")
+    save_pytree(ck2, state)
+    with pytest.raises(ValueError, match="fragment_strategy"):
+        _trainer("cocodc", steps=8).restore_checkpoint(ck2)  # strided trainer
+
+
 def test_restore_rejects_wrong_method(tmp_path):
     ck = os.path.join(tmp_path, "m.msgpack")
     tr = _trainer("cocodc", steps=8)

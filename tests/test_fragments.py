@@ -105,6 +105,59 @@ def test_balanced_bytes():
     assert max(sizes) <= 3 * min(sizes)
 
 
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(1, 6), L=st.integers(2, 12))
+def test_skewed_cover_is_disjoint_and_exact(K, L):
+    """strategy="skewed" is still a disjoint exact cover."""
+    cfg = tiny_cfg(L)
+    params = make_params(cfg)
+    shape = jax.eval_shape(lambda: params)
+    frag = make_fragmenter(cfg, shape, K, strategy="skewed")
+    tree = params
+    for p in range(K):
+        fp = frag.extract(tree, p)
+        zeros = jax.tree.map(lambda a: None if a is None else jnp.zeros_like(a),
+                             fp, is_leaf=lambda x: x is None)
+        tree = frag.insert(tree, p, zeros)
+    for leaf in jax.tree.leaves(tree):
+        assert float(jnp.max(jnp.abs(leaf))) == 0.0
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    assert sum(frag.fragment_bytes(p) for p in range(K)) == total
+
+
+def test_skewed_bytes_actually_skew():
+    """Geometric byte shares: fragment 0 is the heaviest, sizes decrease, and
+    every fragment keeps >= 1 layer when depth allows — so per-fragment WAN
+    costs differ enough for Algorithm-2 pricing to flip selections."""
+    cfg = tiny_cfg(12)
+    shape = jax.eval_shape(lambda: make_params(cfg))
+    K = 4
+    skew = make_fragmenter(cfg, shape, K, strategy="skewed")
+    flat = make_fragmenter(cfg, shape, K)           # strided baseline
+    sk = [skew.fragment_bytes(p) for p in range(K)]
+    fl = [flat.fragment_bytes(p) for p in range(K)]
+    assert sk[0] == max(sk) and sk[0] > sk[K - 1]
+    assert all(s > 0 for s in sk)
+    # meaningfully more spread than the balanced baseline
+    assert (max(sk) / min(sk)) > 1.5 * (max(fl) / min(fl))
+    # layered rows are consecutive, every fragment owns at least one layer
+    for pl in skew._plans.values():
+        if pl.is_layered:
+            assert all(len(r) >= 1 for r in pl.rows)
+            for r in pl.rows:
+                assert list(r) == list(range(r[0], r[0] + len(r)))
+
+
+def test_fragment_strategy_validation():
+    cfg = tiny_cfg()
+    shape = jax.eval_shape(lambda: make_params(cfg))
+    with pytest.raises(ValueError, match="strategy"):
+        make_fragmenter(cfg, shape, 2, strategy="zigzag")
+    # legacy flag still selects the old patterns
+    assert make_fragmenter(cfg, shape, 2, strided=True).strategy == "strided"
+    assert make_fragmenter(cfg, shape, 2, strided=False).strategy == "contiguous"
+
+
 @pytest.mark.parametrize("arch_family", ["moe", "hybrid", "audio"])
 def test_fragmenter_nondense_families(arch_family):
     from repro.configs import get_config
