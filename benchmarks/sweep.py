@@ -10,20 +10,29 @@ topologies never exercise it.
 
     PYTHONPATH=src python benchmarks/sweep.py                 # full grid
     PYTHONPATH=src python benchmarks/sweep.py --scenario hub_failure8
-    PYTHONPATH=src python benchmarks/sweep.py --smoke         # CI: 2x2 grid,
-                                                              # schema-checked
+    PYTHONPATH=src python benchmarks/sweep.py --smoke         # CI: tiny grid
+                                                              # + routed compare
 
 Per (scenario, method) the JSON records steps-to-target-PPL (target = the
 weakest method's best PPL, the Table-I analog), WAN bytes/busy-seconds per
 link, stall seconds/fraction (time lost to troughs+outages vs the static
-cost), outage retries, and the full eval history. ``--smoke`` fails (exit 1)
-on schema drift or non-finite metrics so CI catches regressions in the
-dynamics layer.
+cost), outage retries, and the full eval history. The ``*_routed`` scenarios
+rerun a dynamic scenario with the routed communication planner (multi-hop
+routes + hub failover + Eq. 9 re-derivation); ``--smoke`` fails (exit 1) on
+schema drift, non-finite metrics, or a routed hub-failure run whose stall
+fraction is not strictly below its static-route twin's.
+
+Bandwidth scales are AUTO-CALIBRATED from the sweep model's mean fragment
+byte size (`calibrate_bw_scale`, paper_network-style): one fragment
+collective spends ~CALIB_BW_STEPS compute steps in bandwidth, so the toy
+transfers are bandwidth-dominated and the dynamics under test actually bite.
+`Scenario.bw_scale` overrides the calibration when set.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import math
 import os
 import sys
@@ -43,6 +52,11 @@ MODEL = ModelConfig(name="sweep-lm", family="dense", n_layers=4, d_model=96,
                     compute_dtype="float32")
 
 METHODS = ("diloco", "streaming", "cocodc", "local")
+NUM_FRAGMENTS = 4
+# auto-calibration target: bandwidth-seconds of one MEAN-FRAGMENT collective,
+# in compute steps (latency is left untouched, so the calibrated transfers are
+# bandwidth-dominated by construction — asserted in calibrate_bw_scale)
+CALIB_BW_STEPS = 6.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +69,9 @@ class Scenario:
     all-reduce costs several compute steps at this benchmark's tiny model
     scale (the same calibration trick as `paper_network`): without it the
     transfers are latency-dominated and diurnal troughs/outages would be
-    invisible to the methods under test."""
+    invisible to the methods under test. ``None`` (the default) derives the
+    scale from the sweep model's actual fragment byte size
+    (`calibrate_bw_scale`); a float overrides the calibration."""
     name: str
     n: int = 4
     mesh: str | None = None          # generated-mesh profile
@@ -63,42 +79,71 @@ class Scenario:
     dynamics: str | None = None
     seed: int = 0
     steps: int = 96
-    bw_scale: float = 1.0
+    bw_scale: float | None = None    # None = auto-calibrate
+    routing: str = "static"          # routed communication plans
+    hub_failover: bool = False       # re-elect the hub while its links are out
+    adaptive_resync: bool = False    # re-derive Eq. 9's N from measured T_s
     note: str = ""
 
 
 # The grid: static anchor, the three dynamic failure modes the ROADMAP asks
-# for (diurnal trough, hub failure, flaky transpacific), and generated meshes
-# at N in {4, 8, 16}. `n8_geo_diurnal_hub` is the acceptance scenario:
-# an N=8 generated mesh under diurnal bandwidth AND a hub failure.
+# for (diurnal trough, hub failure, flaky transpacific), generated meshes at
+# N in {4, 8, 16}, and routed-planner compares (`*_routed` runs the identical
+# network with routing + hub failover + Eq. 9 re-derivation enabled).
+# `n8_geo_diurnal_hub` is the acceptance scenario: an N=8 generated mesh under
+# diurnal bandwidth AND a hub failure.
 SCENARIOS = [
     Scenario("static4_paper", steps=96,
              note="static calibrated symmetric network — regression anchor"),
-    Scenario("diurnal_trough4", topology="asym4", steps=96, bw_scale=5e-4,
+    Scenario("diurnal_trough4", topology="asym4", steps=96,
              dynamics="diurnal:period=96:depth=0.7",
              note="asym 4-region mesh through a deep synchronized trough"),
     Scenario("transpacific_flaky_dyn4", topology="transpacific_flaky",
-             steps=96, bw_scale=5e-4,
+             steps=96,
              dynamics="flaky:n=4:dur=6:factor=0.15,jitter:frac=0.05",
              note="degraded crossing + random flaky windows + jitter"),
-    Scenario("hub_failure8", n=8, mesh="hub_spoke", steps=64, bw_scale=2e-4,
+    Scenario("hub_failure8", n=8, mesh="hub_spoke", steps=64,
              dynamics="hub_failure:start=24:dur=16",
              note="hierarchical mesh loses its hub mid-run (full outage)"),
+    Scenario("hub_failure8_routed", n=8, mesh="hub_spoke", steps=64,
+             dynamics="hub_failure:start=24:dur=16",
+             routing="routed", hub_failover=True, adaptive_resync=True,
+             note="hub_failure8 on the routed planner: the collective "
+                  "re-forms around a deterministically elected stand-in hub"),
     Scenario("n8_geo_diurnal_hub", n=8, mesh="random_geo", steps=64,
-             bw_scale=1e-4,
              dynamics="diurnal:period=64:depth=0.6,"
                       "hub_failure:start=20:dur=12:factor=0.1",
              note="ACCEPTANCE: N=8 generated mesh, diurnal + hub failure"),
+    Scenario("n8_geo_diurnal_hub_routed", n=8, mesh="random_geo", steps=64,
+             dynamics="diurnal:period=64:depth=0.6,"
+                      "hub_failure:start=20:dur=12:factor=0.1",
+             routing="routed", hub_failover=True, adaptive_resync=True,
+             note="acceptance compare: routed multi-hop planner on the same "
+                  "N=8 geo mesh"),
     Scenario("continental8_jitter", n=8, mesh="continental", steps=64,
-             bw_scale=2e-4, dynamics="jitter:frac=0.1",
+             dynamics="jitter:frac=0.1",
              note="clustered continents with per-transfer jitter"),
-    Scenario("ring16_diurnal", n=16, mesh="ring", steps=48, bw_scale=2e-4,
+    Scenario("ring16_diurnal", n=16, mesh="ring", steps=48,
              dynamics="diurnal:period=48:depth=0.5",
              note="wide 16-region ring under staggered timezones"),
 ]
 
-SMOKE_SCENARIOS = ("static4_paper", "n8_geo_diurnal_hub")
 SMOKE_METHODS = ("streaming", "cocodc")
+# smoke grid: (scenario name, methods, steps). The hub-failure pair runs long
+# enough to cover the outage window [24, 40) AND recovery, because the smoke
+# contract compares routed vs static stall fractions across it.
+SMOKE_GRID = (
+    ("static4_paper", SMOKE_METHODS, 12),
+    ("n8_geo_diurnal_hub", SMOKE_METHODS, 12),
+    ("hub_failure8", ("cocodc",), 44),
+    ("hub_failure8_routed", ("cocodc",), 44),
+)
+# routed scenario -> its static-route twin; --smoke FAILS if the routed run's
+# stall_fraction is not strictly below the static run's on any shared method
+ROUTED_COMPARE = {
+    "hub_failure8_routed": "hub_failure8",
+    "n8_geo_diurnal_hub_routed": "n8_geo_diurnal_hub",
+}
 
 # Required result schema per (scenario, method) — drift fails --smoke.
 RUN_SCHEMA = {
@@ -107,7 +152,50 @@ RUN_SCHEMA = {
 }
 STATS_KEYS = ("wall_clock_s", "comm_seconds", "bytes_sent", "n_syncs",
               "overlap_ratio", "stall_seconds", "stall_fraction", "n_retries",
+              "reroutes", "hub_elections",
               "busiest_link_bytes", "busiest_link_seconds")
+
+
+@functools.lru_cache(maxsize=1)
+def fragment_wire_bytes() -> int:
+    """Mean fragment payload of the sweep model (f32 wire format), from the
+    real fragmenter — the calibration input."""
+    import jax
+
+    from repro.core.fragments import make_fragmenter
+    from repro.models import api
+
+    shape = jax.eval_shape(functools.partial(api.init_params, MODEL),
+                           jax.random.PRNGKey(0))
+    frag = make_fragmenter(MODEL, shape, NUM_FRAGMENTS)
+    return frag.total_bytes // NUM_FRAGMENTS
+
+
+def calibrate_bw_scale(net, frag_bytes: int, *,
+                       target_steps: float = CALIB_BW_STEPS) -> float:
+    """paper_network-style auto-calibration: the bandwidth multiplier that
+    makes one mean-fragment collective spend `target_steps * T_c` seconds in
+    its BANDWIDTH phase on this topology. The bandwidth phase is measured on
+    a latency-free copy (on a heterogeneous mesh the collective's bottleneck
+    link CHANGES with the scale, so subtracting the latency phases from the
+    full cost would calibrate against the wrong link). Latencies are
+    untouched, so the calibrated transfer is bandwidth-dominated — asserted,
+    because a latency-dominated transfer would hide the dynamics under
+    test."""
+    import numpy as np
+    lat_free = dataclasses.replace(net,
+                                   latency_s=np.zeros_like(net.latency_s))
+    bw_seconds = lat_free.allreduce_time(frag_bytes)
+    if bw_seconds <= 0.0:
+        raise AssertionError(
+            f"calibration: topology has no bandwidth cost "
+            f"({net.num_workers} regions)")
+    target = target_steps * net.step_time_s
+    lat = net.allreduce_time(0)
+    assert target > lat, (
+        f"calibrated transfer would be latency-dominated: bandwidth target "
+        f"{target:.3f}s <= latency phases {lat:.3f}s")
+    return bw_seconds / target
 
 
 def build_network(sc: Scenario, step_time_s: float = 1.0):
@@ -120,16 +208,22 @@ def build_network(sc: Scenario, step_time_s: float = 1.0):
                             step_time_s=step_time_s)
     else:
         return None
-    if sc.bw_scale != 1.0:
+    scale = sc.bw_scale
+    if scale is None:
+        scale = calibrate_bw_scale(net, fragment_wire_bytes())
+    if scale != 1.0:
         net = dataclasses.replace(net,
-                                  bandwidth_Bps=net.bandwidth_Bps * sc.bw_scale)
+                                  bandwidth_Bps=net.bandwidth_Bps * scale)
     return apply_dynamics(net, sc.dynamics, seed=sc.seed)
 
 
 def run_one(sc: Scenario, method: str, steps: int) -> dict:
-    ccfg = CoCoDCConfig(num_workers=sc.n, local_steps=24, num_fragments=4,
+    ccfg = CoCoDCConfig(num_workers=sc.n, local_steps=24,
+                        num_fragments=NUM_FRAGMENTS,
                         overlap_depth=8, comp_lambda=0.5, net_utilization=0.4,
-                        mixing_alpha=0.5)
+                        mixing_alpha=0.5, routing=sc.routing,
+                        hub_failover=sc.hub_failover,
+                        adaptive_resync=sc.adaptive_resync)
     tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
                          total_steps=steps, warmup_steps=max(2, steps // 10),
                          inner_lr=3e-3, seed=sc.seed, eval_batch=8,
@@ -218,6 +312,32 @@ def validate_payload(payload: dict, scenario: str):
             fail("dynamics declared but no run recorded any stall/retry")
 
 
+def compare_routed(payloads: dict) -> "list[str]":
+    """Routed-vs-static stall comparison over `ROUTED_COMPARE` pairs present
+    in `payloads` (scenario name -> payload). Returns failure strings for any
+    shared method where the routed run's stall_fraction is NOT strictly below
+    the static-route run's — the failover acceptance contract."""
+    failures = []
+    for routed_name, static_name in ROUTED_COMPARE.items():
+        rp, sp = payloads.get(routed_name), payloads.get(static_name)
+        if rp is None or sp is None:
+            continue
+        shared = [m for m in rp["runs"] if m in sp["runs"] and m != "local"]
+        for m in shared:
+            rf = rp["runs"][m]["stats"]["stall_fraction"]
+            sf = sp["runs"][m]["stats"]["stall_fraction"]
+            st = rp["runs"][m]["stats"]
+            emit(f"sweep/{routed_name}/{m}/stall_vs_static", 0.0,
+                 f"routed={rf*100:.1f}%;static={sf*100:.1f}%;"
+                 f"reroutes={int(st['reroutes'])};"
+                 f"hub_elections={int(st['hub_elections'])}")
+            if rf >= sf:
+                failures.append(
+                    f"[{routed_name}] {m}: routed stall_fraction {rf:.4f} is "
+                    f"not strictly below static {sf:.4f}")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default=None,
@@ -226,22 +346,33 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=None,
                     help="override the per-scenario step budget")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: 2 scenarios x 2 methods at a tiny step "
-                         "count; exits 1 on schema drift or NaN metrics")
+                    help="CI mode: tiny grid incl. the routed hub-failure "
+                         "compare; exits 1 on schema drift, NaN metrics, or a "
+                         "routed run that does not beat its static twin's "
+                         "stall fraction")
     args = ap.parse_args(argv)
 
+    by_name = {s.name: s for s in SCENARIOS}
     if args.smoke:
-        grid = [s for s in SCENARIOS if s.name in SMOKE_SCENARIOS]
-        methods, steps = SMOKE_METHODS, args.steps or 12
+        # --steps may shorten the quick scenarios but never the routed-vs-
+        # static pair below its grid budget: cutting the run before the
+        # outage window would fail the strict stall comparison spuriously
+        compare_names = set(ROUTED_COMPARE) | set(ROUTED_COMPARE.values())
+        grid = [(by_name[name], methods,
+                 max(args.steps, steps) if args.steps and name
+                 in compare_names else (args.steps or steps))
+                for name, methods, steps in SMOKE_GRID]
     else:
-        grid = ([s for s in SCENARIOS if s.name == args.scenario]
-                if args.scenario else SCENARIOS)
-        methods, steps = METHODS, args.steps
+        names = [args.scenario] if args.scenario else [s.name
+                                                       for s in SCENARIOS]
+        grid = [(by_name[n], METHODS, args.steps) for n in names]
 
     summary = {}
     failures = []
-    for sc in grid:
+    payloads = {}
+    for sc, methods, steps in grid:
         payload = run_scenario(sc, methods=methods, steps=steps)
+        payloads[sc.name] = payload
         try:
             validate_payload(payload, sc.name)
         except AssertionError as e:
@@ -250,6 +381,7 @@ def main(argv=None) -> int:
         save_json(os.path.join("sweep", sc.name), payload)
         summary[sc.name] = {
             "note": sc.note, "n": sc.n, "steps": payload["steps"],
+            "routing": sc.routing,
             "target_ppl": payload["target_ppl"],
             "steps_to_target": {m: r["steps_to_target"]
                                 for m, r in payload["runs"].items()},
@@ -257,14 +389,23 @@ def main(argv=None) -> int:
                                for m, r in payload["runs"].items()},
             "wall_clock_s": {m: r["stats"]["wall_clock_s"]
                              for m, r in payload["runs"].items()},
+            "reroutes": {m: r["stats"]["reroutes"]
+                         for m, r in payload["runs"].items()},
+            "hub_elections": {m: r["stats"]["hub_elections"]
+                              for m, r in payload["runs"].items()},
         }
         stt = summary[sc.name]["steps_to_target"]
         if stt.get("cocodc") and stt.get("streaming"):
             emit(f"sweep/{sc.name}/cocodc_vs_streaming", 0.0,
                  f"{100 * (1 - stt['cocodc'] / stt['streaming']):.1f}%")
+    routed_failures = compare_routed(payloads)
+    if args.smoke:
+        failures.extend(routed_failures)
+    for f in routed_failures:
+        print(f"ROUTED COMPARE FAIL {f}", file=sys.stderr, flush=True)
     save_json("sweep_summary", summary)
     if failures:
-        print(f"{len(failures)} schema failure(s)", file=sys.stderr)
+        print(f"{len(failures)} failure(s)", file=sys.stderr)
         return 1
     return 0
 

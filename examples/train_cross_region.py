@@ -42,6 +42,15 @@ def main():
     ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
                     help="segment-scanned execution engine vs per-step loop")
     ap.add_argument("--link-pricing", action="store_true")
+    ap.add_argument("--routing", default="static",
+                    choices=["static", "routed"],
+                    help="routed multi-hop communication plans over the "
+                         "current link state")
+    ap.add_argument("--hub-failover", action="store_true",
+                    help="with --routing routed: re-elect the hub while the "
+                         "declared one's links are out")
+    ap.add_argument("--adaptive-resync", action="store_true",
+                    help="re-derive Eq. 9's N per round from measured T_s")
     ap.add_argument("--resume", default=None,
                     help="trainer_state_v1 checkpoint to continue from")
     ap.add_argument("--full-model", action="store_true")
@@ -71,6 +80,12 @@ def main():
         argv.extend(["--resume", args.resume])
     if args.link_pricing:
         argv.append("--link-pricing")
+    if args.routing != "static":
+        argv.extend(["--routing", args.routing])
+    if args.hub_failover:
+        argv.append("--hub-failover")
+    if args.adaptive_resync:
+        argv.append("--adaptive-resync")
     if not args.full_model:
         argv.append("--reduced")
         argv.extend(["--lr", "3e-3"])

@@ -167,3 +167,18 @@ class CoCoDCConfig:
     # change-rate per WAN-second (R_p / T_s,p) instead of raw R_p, so cheaper
     # fragments win ties on heterogeneous topologies. Off = literal Eq. 12.
     link_pricing: bool = False
+    # Routed communication plans (beyond-paper): "static" keeps the fixed
+    # ring/hierarchical cost formulas bitwise (PR 3 behavior); "routed" plans
+    # every collective over the CURRENT link state — deterministic multi-hop
+    # min-cost routes, re-planned at each LinkDynamics edge — and refreshes
+    # the Algorithm-2 cost vector from the active plan.
+    routing: str = "static"
+    # With routing="routed": while the declared hub's links are out,
+    # deterministically re-elect the next-best-connected region as hub
+    # (restored on recovery) and drop fully dark regions from the collective
+    # instead of stalling it.
+    hub_failover: bool = False
+    # Re-derive Eq. 9's target sync count N (and Eq. 10's h) once per outer
+    # round from the MEASURED durations of recent transfers, so the cocodc
+    # initiation cadence tracks the network the run actually sees.
+    adaptive_resync: bool = False

@@ -6,14 +6,18 @@
   adaptive     — Algorithm 2 + Eqs. 9-12 (adaptive transmission scheduling)
   network      — WAN cost models: symmetric NetworkModel + heterogeneous
                  per-link Topology (ring/hierarchical collectives, scenarios)
+                 + the routed CommPlan/RoutePlanner layer (multi-hop routes,
+                 hub failover, per-edge re-planning on dynamic links)
   engine_state — functional EngineState pytree + pure jitted transitions
   protocol     — thin host wrapper: simulated wall-clock, channel queueing,
                  schedule, per-link stats around the EngineState transitions
 """
-from repro.core.adaptive import AdaptiveState, select_fragment, sync_interval, target_syncs  # noqa: F401
+from repro.core.adaptive import (AdaptiveState, ResyncState, select_fragment,  # noqa: F401
+                                 sync_interval, target_syncs)
 from repro.core.delay_comp import blend, compensate  # noqa: F401
 from repro.core.engine_state import EngineState, init_state, make_engine_fns  # noqa: F401
 from repro.core.fragments import Fragmenter, make_fragmenter  # noqa: F401
-from repro.core.network import (NetworkModel, Topology, as_topology,  # noqa: F401
-                                make_scenario, paper_network)
+from repro.core.network import (CommPlan, NetworkModel, RoutePlanner,  # noqa: F401
+                                Topology, as_topology, make_scenario,
+                                paper_network)
 from repro.core.protocol import ProtocolEngine  # noqa: F401

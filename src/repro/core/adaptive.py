@@ -5,12 +5,19 @@ next (Algorithm 2). The decision is a pure function of globally shared history
 (completed-sync steps and ||Delta^g_p|| metrics), so every worker computes the same
 schedule with zero coordination messages — exactly the paper's determinism claim,
 and the property test in tests/test_adaptive.py.
+
+``ResyncState`` extends the same contract to a time-varying network: Eq. 9
+derives the target sync count N from T_s, but on dynamic links the startup
+T_s goes stale (a diurnal trough or outage can double it). The engine feeds
+the MEASURED durations of completed transfers — shared history, identical on
+every replica — into a bounded window, and re-derives N (and Eq. 10's h) once
+per outer round from the window mean.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -18,15 +25,17 @@ class AdaptiveState:
     """Shared (deterministically replicated) scheduler state."""
     K: int
     H: int
-    # last completed-sync step per fragment (t_{p,b}); -inf-ish before first sync
-    last_sync: List[int] = None
+    # last completed-sync step per fragment (t_{p,b}); -inf-ish before first
+    # sync. Empty = derive the defaults from K/H below (a dataclass default
+    # cannot see sibling fields, so the fill-in happens in __post_init__).
+    last_sync: List[int] = dataclasses.field(default_factory=list)
     # change-rate metric R_p (Eq. 11); fragments never synced get +inf priority
-    rate: List[float] = None
+    rate: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
-        if self.last_sync is None:
+        if not self.last_sync:
             self.last_sync = [-self.H] * self.K
-        if self.rate is None:
+        if not self.rate:
             self.rate = [math.inf] * self.K
 
 
@@ -40,6 +49,41 @@ def target_syncs(K: int, H: int, t_c: float, t_s: float, gamma: float) -> int:
 def sync_interval(H: int, N: int) -> int:
     """Eq. 10: h = floor(H / N) local steps between initiations."""
     return max(1, H // N)
+
+
+@dataclasses.dataclass
+class ResyncState:
+    """Bounded window of MEASURED fragment-transfer durations (wall seconds,
+    queueing excluded) used to re-derive Eq. 9's N when link dynamics shift
+    the real T_s away from the startup estimate. The window contents are
+    shared history (transfer completions every replica observes), so the
+    re-derivation inherits Algorithm 2's zero-coordination determinism; the
+    engine serializes the window for exact checkpoint/resume."""
+    window: int = 8
+    measured: List[float] = dataclasses.field(default_factory=list)
+
+    def observe(self, t_s: float):
+        """Record one completed transfer's measured duration."""
+        self.measured.append(float(t_s))
+        del self.measured[:-self.window]
+
+    @property
+    def t_s_estimate(self) -> Optional[float]:
+        """Window-mean measured T_s; None until the first completion."""
+        if not self.measured:
+            return None
+        return sum(self.measured) / len(self.measured)
+
+
+def rederive_schedule(resync: ResyncState, K: int, H: int, t_c: float,
+                      gamma: float, fallback_t_s: float) -> Tuple[int, int]:
+    """Eq. 9/10 against the measured T_s (startup estimate until the first
+    transfer completes): returns (N, h) for the next outer round."""
+    t_s = resync.t_s_estimate
+    if t_s is None:
+        t_s = fallback_t_s
+    n = target_syncs(K, H, t_c, t_s, gamma)
+    return n, sync_interval(H, n)
 
 
 def update_rate(state: AdaptiveState, p: int, delta_norm: float, t_complete: int):

@@ -22,6 +22,18 @@ transfer that straddles a trough or an outage finishes late by exactly the
 bandwidth-seconds it lost. ``dynamics is None`` keeps the closed-form static
 path bitwise-unchanged (regression-pinned).
 
+``CommPlan`` / ``RoutePlanner`` — the routed communication-plan layer on top
+of the above: a plan is the executable route set for ONE collective (logical
+links, multi-hop routes chosen by sum-latency + bottleneck-bandwidth cost over
+the *current* effective link state, participants, effective hub) valid until
+the next ``LinkDynamics`` edge. ``RoutePlanner.plan_at(t)`` is a pure function
+of wall-time, so every region replaying the shared dynamics clock elects the
+same hub and computes identical routes with zero coordination — and a resumed
+run re-derives the active plan from its serialized plan time. Hub failover:
+while the declared hub's links are out the next-best-connected region is
+deterministically elected in its place (restored on recovery), and fully dark
+regions drop out of the collective instead of stalling it.
+
 All expose the same cost API used by the engines and Eq. 9:
   * ``t_s(bytes)``   — one fragment all-reduce (wall seconds, nominal)
   * ``t_c``          — per-local-step compute time
@@ -328,14 +340,58 @@ class Topology:
             return 0
         return 2 * (m - 1) if self.collective == "ring" else 2
 
-    def _dyn_latency(self, links, t: float) -> float:
-        """Event-driven extra latency for phases starting at wall-time t."""
+    def _dyn_latency(self, links, t: float,
+                     n_phases: Optional[int] = None) -> float:
+        """Event-driven extra latency for phases starting at wall-time t.
+        `n_phases` overrides the collective's phase count (routed plans may
+        use a different participant set than the full mesh)."""
         dyn = self.dynamics
         if dyn is None or not dyn.events:
             return 0.0
         extra = max((dyn.extra_latency_s(i, j, t) for i, j in links),
                     default=0.0)
-        return self.n_latency_phases * extra
+        if n_phases is None:
+            n_phases = self.n_latency_phases
+        return n_phases * extra
+
+    def _integrate_transfer(self, links, lat: float, work: float, start: float,
+                            n_phases: int) -> Tuple[float, int]:
+        """Shared time-integration core of `transfer_time` /
+        `plan_transfer_time`: serve `work` bandwidth-seconds over `links`
+        starting at `start` (after `lat` seconds of latency phases), pausing
+        through outages and re-paying the latency phases on recovery."""
+        dyn = self.dynamics
+        t = start + lat + self._dyn_latency(links, start, n_phases)
+        n_retries = 0
+        in_outage = False
+        for _ in range(1_000_000):
+            rho = min(dyn.bw_factor(i, j, t) for i, j in links)
+            nxt = dyn.next_change(links, t)
+            if rho <= 0.0:                       # outage: wait for recovery
+                if nxt is None:
+                    raise RuntimeError(
+                        f"transfer started at {start:.3f}s hit a permanent "
+                        f"outage at {t:.3f}s (no future dynamics change)")
+                t = nxt
+                in_outage = True                 # one retry per RECOVERY, not
+                continue                         # per bin edge inside the dark
+            if in_outage:                        # window
+                in_outage = False
+                n_retries += 1
+                if dyn.retry_latency:
+                    t += lat + self._dyn_latency(links, t, n_phases)
+                    continue                     # latency may cross an edge
+            if work <= 0.0:
+                break
+            if nxt is None or work <= (nxt - t) * rho:
+                t += work / rho
+                break
+            work -= (nxt - t) * rho
+            t = nxt
+        else:
+            raise RuntimeError("transfer_time did not converge "
+                               "(pathological dynamics spec)")
+        return t, n_retries
 
     def transfer_time(self, nbytes: int, start: float, *,
                       jitter: float = 1.0) -> Tuple[float, float, int]:
@@ -357,26 +413,182 @@ class Topology:
             return start + nominal, nominal, 0
         lat = self.allreduce_time(0)            # latency phases (fixed part)
         work = (nominal - lat) * jitter         # bandwidth-seconds to serve
-        t = start + lat + self._dyn_latency(links, start)
+        t, n_retries = self._integrate_transfer(links, lat, work, start,
+                                                self.n_latency_phases)
+        return t, nominal, n_retries
+
+    # ------------------------------------------------- plan-based cost model
+
+    def plan_n_latency_phases(self, plan: "CommPlan") -> int:
+        """Latency phases the planned collective pays (over its PARTICIPANTS,
+        which may be fewer than the mesh during an outage)."""
+        p = len(plan.participants)
+        if p <= 1:
+            return 0
+        return 2 * (p - 1) if plan.kind == "ring" else 2
+
+    def _plan_route_costs(self, plan: "CommPlan"):
+        """Per logical link: (summed latency, bottleneck bandwidth) of its hop
+        chain, from the STATIC matrices (nominal cost; dynamics are applied by
+        the time integration)."""
+        lats = [sum(self.latency_s[a, b] for a, b in route)
+                for route in plan.routes]
+        bws = [min(self.bandwidth_Bps[a, b] for a, b in route)
+               for route in plan.routes]
+        return lats, bws
+
+    def plan_allreduce_time(self, plan: "CommPlan", nbytes: int) -> float:
+        """Nominal wall-seconds of one collective executed over `plan`'s
+        routes. For single-hop direct routes over the full mesh this is
+        EXACTLY `allreduce_time(nbytes)` (same arithmetic)."""
+        p = len(plan.participants)
+        if p <= 1 or not plan.logical:
+            return 0.0
+        lats, bws = self._plan_route_costs(plan)
+        if plan.kind == "ring":
+            chunk = nbytes / p
+            phase = max(l + chunk / w for l, w in zip(lats, bws))
+            return 2 * (p - 1) * phase
+        h = plan.hub
+        gather = max(l + nbytes / w
+                     for (i, j), l, w in zip(plan.logical, lats, bws)
+                     if j == h)
+        bcast = max(l + nbytes / w
+                    for (i, j), l, w in zip(plan.logical, lats, bws)
+                    if i == h)
+        return gather + bcast
+
+    def plan_link_bytes(self, plan: "CommPlan", nbytes: int) -> np.ndarray:
+        """(M, M) bytes each directed PHYSICAL link carries for one collective
+        routed per `plan` (every hop of a logical link's route carries that
+        logical link's full payload share)."""
+        m = self.num_workers
+        out = np.zeros((m, m), dtype=np.float64)
+        p = len(plan.participants)
+        if p <= 1 or not plan.logical:
+            return out
+        per_logical = (2 * (p - 1) * nbytes / p if plan.kind == "ring"
+                       else nbytes)
+        for route in plan.routes:
+            for a, b in route:
+                out[a, b] += per_logical
+        return out
+
+    def plan_link_seconds(self, plan: "CommPlan", nbytes: int) -> np.ndarray:
+        """(M, M) nominal busy-seconds per directed physical link for one
+        collective routed per `plan`."""
+        m = self.num_workers
+        out = np.zeros((m, m), dtype=np.float64)
+        p = len(plan.participants)
+        if p <= 1 or not plan.logical:
+            return out
+        if plan.kind == "ring":
+            phases, chunk = 2 * (p - 1), nbytes / p
+            for route in plan.routes:
+                for a, b in route:
+                    out[a, b] += phases * (
+                        self.latency_s[a, b] + chunk / self.bandwidth_Bps[a, b])
+        else:
+            for route in plan.routes:
+                for a, b in route:
+                    out[a, b] += (self.latency_s[a, b]
+                                  + nbytes / self.bandwidth_Bps[a, b])
+        return out
+
+    def plan_transfer_time(self, plan: "CommPlan", nbytes: int, start: float,
+                           *, jitter: float = 1.0) -> Tuple[float, float, int]:
+        """`transfer_time` over a FIXED routed plan: the bottleneck factor is
+        taken over the plan's physical hops (a plan that routed around a dark
+        link never waits on it). See `routed_transfer_time` for the
+        re-planning variant the engine uses."""
+        nominal = self.plan_allreduce_time(plan, nbytes)
+        dyn = self.dynamics
+        links = plan.phys_links
+        if dyn is None or not links:
+            return start + nominal, nominal, 0
+        lat = self.plan_allreduce_time(plan, 0)
+        work = (nominal - lat) * jitter
+        t, n_retries = self._integrate_transfer(
+            links, lat, work, start, self.plan_n_latency_phases(plan))
+        return t, nominal, n_retries
+
+    def routed_transfer_time(
+            self, plan_fn, nbytes: int, start: float, *,
+            jitter: float = 1.0,
+    ) -> Tuple[float, float, int, List[Tuple["CommPlan", float]]]:
+        """Simulate one collective on RE-PLANNABLE routes. ``plan_fn(t)``
+        supplies the valid plan at wall-time t (the engine passes a wrapper
+        around its `_active_plan`, so counters and plan side effects track
+        every refresh). The transfer executes plan_fn(start)'s routes; at a
+        plan validity edge where those routes have gone DARK and the fresh
+        plan routes differently, the collective RE-FORMS on the new routes —
+        it pays the new plan's latency phases again (counted as a retry) and
+        the unserved payload fraction carries over. Working routes are never
+        abandoned mid-transfer (no route flapping), so with no outage this is
+        exactly `plan_transfer_time` of the starting plan.
+
+        Returns ``(finish, nominal, n_retries, segments)``; `nominal` is the
+        STARTING plan's closed-form cost (the stall baseline) and `segments`
+        is ``[(plan, payload_fraction_served), ...]`` — the accounting split
+        across the plans that actually carried the bytes (a single
+        ``(plan, 1.0)`` entry when no re-form happened)."""
+        plan = plan_fn(start)
+        nominal = self.plan_allreduce_time(plan, nbytes)
+        dyn = self.dynamics
+        if dyn is None or not plan.phys_links:
+            return start + nominal, nominal, 0, [(plan, 1.0)]
+
+        def establish(p: "CommPlan"):
+            lat = self.plan_allreduce_time(p, 0)
+            phases = self.plan_n_latency_phases(p)
+            total = (self.plan_allreduce_time(p, nbytes) - lat) * jitter
+            return p.phys_links, lat, phases, total
+
+        links, lat, phases, work_total = establish(plan)
+        work = work_total
+        frac_in = 1.0                    # payload fraction unserved at entry
+        segments: List[Tuple["CommPlan", float]] = []
+        check_at = plan.valid_until      # next plan refresh (<= any link edge)
+        t = start + lat + self._dyn_latency(links, start, phases)
         n_retries = 0
         in_outage = False
         for _ in range(1_000_000):
+            if t >= check_at:
+                new = plan_fn(t)
+                check_at = new.valid_until
+                if (new.route_key() != plan.route_key()
+                        and min(dyn.bw_factor(i, j, t)
+                                for i, j in links) <= 0.0):
+                    # current routes are dark and an alternative exists:
+                    # re-form the collective on the fresh routes
+                    frac_left = (work / work_total if work_total > 0 else 0.0)
+                    segments.append((plan, frac_in - frac_left))
+                    frac_in = frac_left
+                    plan = new
+                    links, lat, phases, work_total = establish(plan)
+                    work = frac_left * work_total
+                    n_retries += 1
+                    in_outage = False
+                    t += lat + self._dyn_latency(links, t, phases)
+                    continue
             rho = min(dyn.bw_factor(i, j, t) for i, j in links)
             nxt = dyn.next_change(links, t)
-            if rho <= 0.0:                       # outage: wait for recovery
+            if math.isfinite(check_at):
+                nxt = check_at if nxt is None else min(nxt, check_at)
+            if rho <= 0.0:                   # dark with no alternative: wait
                 if nxt is None:
                     raise RuntimeError(
                         f"transfer started at {start:.3f}s hit a permanent "
                         f"outage at {t:.3f}s (no future dynamics change)")
                 t = nxt
-                in_outage = True                 # one retry per RECOVERY, not
-                continue                         # per bin edge inside the dark
-            if in_outage:                        # window
+                in_outage = True
+                continue
+            if in_outage:                    # recovered on the SAME routes
                 in_outage = False
                 n_retries += 1
                 if dyn.retry_latency:
-                    t += lat + self._dyn_latency(links, t)
-                    continue                     # latency may cross an edge
+                    t += lat + self._dyn_latency(links, t, phases)
+                    continue
             if work <= 0.0:
                 break
             if nxt is None or work <= (nxt - t) * rho:
@@ -385,9 +597,10 @@ class Topology:
             work -= (nxt - t) * rho
             t = nxt
         else:
-            raise RuntimeError("transfer_time did not converge "
+            raise RuntimeError("routed_transfer_time did not converge "
                                "(pathological dynamics spec)")
-        return t, nominal, n_retries
+        segments.append((plan, frac_in))
+        return t, nominal, n_retries, segments
 
     # ------------------------------------------------------ per-link traffic
 
@@ -464,6 +677,225 @@ def as_topology(net) -> Topology:
     if isinstance(net, NetworkModel):
         return net.to_topology()
     raise TypeError(f"expected NetworkModel or Topology, got {type(net)}")
+
+
+# ---------------------------------------------------------------------------
+# routed communication plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Executable route set for ONE collective, computed against the link
+    state at ``valid_from`` and usable until ``valid_until`` (the next
+    dynamics edge; ``inf`` on a static topology).
+
+    ``logical`` are the collective's logical links (ring neighbor pairs or
+    spoke<->hub pairs over the PARTICIPANTS — regions whose links are not all
+    dark); ``routes[i]`` is the chain of directed physical hops logical link i
+    actually traverses (a single direct hop on a healthy network)."""
+    kind: str                                        # "ring" | "hierarchical"
+    hub: int                                         # effective hub
+    participants: Tuple[int, ...]
+    logical: Tuple[Tuple[int, int], ...]
+    routes: Tuple[Tuple[Tuple[int, int], ...], ...]
+    valid_from: float
+    valid_until: float
+
+    @property
+    def phys_links(self) -> Tuple[Tuple[int, int], ...]:
+        """Unique directed physical hops the plan uses (first-use order)."""
+        seen: List[Tuple[int, int]] = []
+        for route in self.routes:
+            for hop in route:
+                if hop not in seen:
+                    seen.append(hop)
+        return tuple(seen)
+
+    @property
+    def is_multi_hop(self) -> bool:
+        return any(len(route) > 1 for route in self.routes)
+
+    def route_key(self):
+        """Identity of the routing decision (reroute/election counting)."""
+        return (self.kind, self.hub, self.participants, self.routes)
+
+
+def _path_better(cand, cur) -> bool:
+    """Deterministic path preference: lower cost, then fewer hops, then the
+    lexicographically smallest node sequence."""
+    c1, p1 = cand
+    c2, p2 = cur
+    return (c1, len(p1), p1) < (c2, len(p2), p2)
+
+
+class RoutePlanner:
+    """Deterministic network-aware route planner for one Topology.
+
+    ``plan_at(t)`` is a PURE function of wall-time: the effective link state
+    (static matrices x dynamics factors at t) determines participants, the
+    effective hub, and min-cost multi-hop routes (per-hop cost = latency +
+    ref_bytes / effective bandwidth; dark links are unusable). Every region
+    replaying the shared dynamics clock therefore computes the identical plan
+    with zero coordination messages — the same determinism contract as
+    Algorithm 2 — and a resumed run re-derives the active plan from the
+    serialized plan time alone.
+
+    ``hub_failover=True`` re-elects the next-best-connected participant
+    (largest total effective bandwidth; ties -> lowest index) as hub while the
+    declared hub is dark, and restores the declared hub on recovery."""
+
+    def __init__(self, topo: Topology, *, hub_failover: bool = False,
+                 ref_bytes: int = 1):
+        self.topo = topo
+        self.hub_failover = bool(hub_failover)
+        self.ref_bytes = max(1, int(ref_bytes))
+
+    # ------------------------------------------------------------ link state
+
+    def effective_bandwidth(self, t: float) -> np.ndarray:
+        """(M, M) off-diagonal effective bandwidth at wall-time t (static
+        matrix x dynamics bandwidth factor; 0.0 = dark link)."""
+        topo = self.topo
+        m = topo.num_workers
+        dyn = topo.dynamics
+        eff = np.zeros((m, m), dtype=np.float64)
+        for i in range(m):
+            for j in range(m):
+                if i == j:
+                    continue
+                f = dyn.bw_factor(i, j, t) if dyn is not None else 1.0
+                eff[i, j] = topo.bandwidth_Bps[i, j] * f
+        return eff
+
+    def dark_regions(self, t: float,
+                     eff: Optional[np.ndarray] = None) -> Tuple[int, ...]:
+        """Regions with EVERY incident directed link dark at t — they cannot
+        participate in any collective and drop out instead of stalling it."""
+        if eff is None:
+            eff = self.effective_bandwidth(t)
+        m = self.topo.num_workers
+        out = []
+        for r in range(m):
+            inc = [eff[r, j] for j in range(m) if j != r]
+            inc += [eff[j, r] for j in range(m) if j != r]
+            if inc and max(inc) <= 0.0:
+                out.append(r)
+        return tuple(out)
+
+    def elect_hub(self, t: float,
+                  participants: Optional[Sequence[int]] = None,
+                  eff: Optional[np.ndarray] = None) -> int:
+        """Effective hub at t: the declared hub while it participates; when it
+        is dark (links out) and failover is on, the next-best-connected
+        participant (largest total effective bandwidth, ties -> lowest
+        index)."""
+        topo = self.topo
+        if eff is None:
+            eff = self.effective_bandwidth(t)
+        if participants is None:
+            dark = self.dark_regions(t, eff)
+            participants = [r for r in range(topo.num_workers)
+                            if r not in dark]
+        declared = topo.hub
+        if not self.hub_failover or declared in participants \
+                or not participants:
+            return declared
+
+        def score(r: int) -> float:
+            return float(sum(eff[r, j] + eff[j, r]
+                             for j in participants if j != r))
+
+        return max(participants, key=lambda r: (score(r), -r))
+
+    # --------------------------------------------------------------- routing
+
+    def _shortest_paths(self, eff: np.ndarray, nodes: Sequence[int]):
+        """All-pairs deterministic min-cost paths over `nodes` (per-hop cost =
+        latency + ref_bytes/effective bandwidth; dark hops excluded). Ties
+        break on hop count then the node sequence, so every replica agrees."""
+        topo = self.topo
+        ref = float(self.ref_bytes)
+        w = {}
+        for a in nodes:
+            for b in nodes:
+                if a != b and eff[a, b] > 0.0:
+                    w[(a, b)] = float(topo.latency_s[a, b]) + ref / eff[a, b]
+        best = {a: {a: (0.0, (a,))} for a in nodes}
+        edges = sorted(w)
+        for _ in range(max(1, len(nodes))):
+            changed = False
+            for u, v in edges:
+                for a in nodes:
+                    row = best[a]
+                    if u not in row:
+                        continue
+                    cu, pu = row[u]
+                    if v in pu:                       # simple paths only
+                        continue
+                    cand = (cu + w[(u, v)], pu + (v,))
+                    cur = row.get(v)
+                    if cur is None or _path_better(cand, cur):
+                        row[v] = cand
+                        changed = True
+            if not changed:
+                break
+        return best
+
+    def plan_at(self, t: float) -> CommPlan:
+        """The routed plan for one collective starting at wall-time t — a pure
+        function of t (see class docstring)."""
+        topo = self.topo
+        m = topo.num_workers
+        eff = self.effective_bandwidth(t)
+        # dropping dark regions (and re-electing the hub) is the FAILOVER
+        # behavior; plain routed mode re-routes over the full mesh and still
+        # stalls on an unreachable region, like the static path
+        dark = self.dark_regions(t, eff) if self.hub_failover else ()
+        participants = tuple(r for r in range(m) if r not in dark)
+        fallback = len(participants) < 2     # total blackout: stall like the
+        if fallback:                         # static path rather than "free"
+            participants = tuple(range(m))
+        kind = topo.collective
+        hub = topo.hub
+        if kind == "hierarchical" and not fallback:
+            hub = self.elect_hub(t, participants, eff)
+
+        logical: List[Tuple[int, int]] = []
+        if len(participants) > 1:
+            if kind == "ring":
+                for idx, a in enumerate(participants):
+                    logical.append(
+                        (a, participants[(idx + 1) % len(participants)]))
+            else:
+                for s in participants:
+                    if s != hub:
+                        logical.extend([(s, hub), (hub, s)])
+
+        if fallback:
+            routes = tuple(((a, b),) for a, b in logical)
+        else:
+            paths = self._shortest_paths(eff, participants)
+            routes_list = []
+            for a, b in logical:
+                hit = paths.get(a, {}).get(b)
+                if hit is None:              # unreachable: direct hop (stalls)
+                    routes_list.append(((a, b),))
+                else:
+                    seq = hit[1]
+                    routes_list.append(tuple(zip(seq[:-1], seq[1:])))
+            routes = tuple(routes_list)
+
+        dyn = topo.dynamics
+        valid_until = math.inf
+        if dyn is not None:
+            all_pairs = [(i, j) for i in range(m) for j in range(m) if i != j]
+            nxt = dyn.next_change(all_pairs, t)
+            if nxt is not None:
+                valid_until = nxt
+        return CommPlan(kind=kind, hub=hub, participants=participants,
+                        logical=tuple(logical), routes=routes,
+                        valid_from=float(t), valid_until=float(valid_until))
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,18 @@ counter so checkpoint/resume replays the identical transfer schedule.
 `dynamics=None` follows the original static arithmetic bitwise (pinned by
 tests/test_network_dynamics.py).
 
+With `CoCoDCConfig.routing="routed"` every collective executes over a
+`CommPlan` from the deterministic `RoutePlanner` (core/network.py): multi-hop
+min-cost routes over the CURRENT link state, re-planned whenever a
+`LinkDynamics.next_change` edge passes, with optional hub failover
+(`hub_failover=True`: dark regions drop out of the collective and the
+next-best-connected region stands in as hub until recovery). The Algorithm-2
+cost vector is refreshed from the active plan on every re-plan, and
+`adaptive_resync=True` re-derives Eq. 9's N / Eq. 10's h once per outer round
+from the measured durations of completed transfers. `routing="static"`
+(default) keeps every pre-routing code path — and the PR 3 golden delivery
+schedules — bitwise.
+
 The cross-pod mean over the worker axis is the ONLY cross-region collective;
 under the multi-pod mesh it lowers to an all-reduce over the `pod` axis
 (verified in the dry-run).
@@ -43,7 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -53,7 +65,7 @@ from repro.configs.base import CoCoDCConfig
 from repro.core import adaptive as adaptive_lib
 from repro.core import engine_state as es
 from repro.core.fragments import Fragmenter
-from repro.core.network import Topology, as_topology
+from repro.core.network import CommPlan, RoutePlanner, Topology, as_topology
 
 
 @dataclasses.dataclass
@@ -65,6 +77,8 @@ class PendingSync:
     deliver_at: int        # step index at which the delivery lands
     finish_time: float     # simulated transfer completion (wall seconds)
     seq: int               # initiation order (stable delivery tie-break)
+    duration: float = 0.0  # measured transfer seconds (finish - channel start;
+                           # queueing excluded) — the Eq. 9 re-derivation input
 
 
 class ProtocolEngine:
@@ -96,18 +110,52 @@ class ProtocolEngine:
         # Eq. 9/10 scheduling interval
         mean_frag_bytes = self.frag.total_bytes / self.K
         t_s = self.topology.t_s(int(mean_frag_bytes))
+        self._t_s_startup = t_s
         self.N = adaptive_lib.target_syncs(self.K, self.H, self.topology.t_c,
                                            t_s, ccfg.net_utilization)
         self.h_cocodc = adaptive_lib.sync_interval(self.H, self.N)
         self.h_stream = max(1, self.H // self.K)
         # per-fragment WAN price (seconds per sync) for Algorithm 2 link-aware
-        # pricing — heterogeneous fragments/links make some syncs cheaper
+        # pricing — heterogeneous fragments/links make some syncs cheaper.
+        # With routing enabled this vector is refreshed from the ACTIVE plan
+        # every re-plan (the startup value goes stale on dynamic links).
         self._frag_cost = [
             self.topology.t_s(self._wire_bytes(self.frag.fragment_bytes(p)))
             for p in range(self.K)]
         # partial participation (straggler tolerance, beyond-paper): offline
         # workers neither contribute to nor receive fragment syncs
         self.worker_available = [True] * self.M
+
+        # routed communication-plan layer (off by default — the static path
+        # must stay bitwise-identical to the PR 3 goldens)
+        if ccfg.routing not in ("static", "routed"):
+            raise ValueError(f"unknown routing mode {ccfg.routing!r} "
+                             f"(options: static, routed)")
+        if ccfg.hub_failover and ccfg.routing != "routed":
+            raise ValueError("hub_failover requires routing='routed'")
+        self._planner: "RoutePlanner | None" = None
+        if ccfg.routing == "routed":
+            self._planner = RoutePlanner(
+                self.topology, hub_failover=ccfg.hub_failover,
+                ref_bytes=self._wire_bytes(int(mean_frag_bytes)))
+        self._plan: "CommPlan | None" = None
+        self._plan_time: "float | None" = None
+        # regions the PLANNER took offline -> the availability the USER had
+        # set beforehand (restored verbatim on recovery)
+        self._plan_dark: Dict[int, bool] = {}
+        self.reroutes = 0                # plan changes between transfer uses
+        self.hub_elections = 0           # hub changes (failover + restore)
+        # counters sample plan changes at TRANSFER use only (wall-clock
+        # refreshes would make them loop-cadence-dependent); the reference is
+        # the last transfer-used plan, re-derivable from its plan time
+        self._counted_time: "float | None" = None
+        self._counted_key = None
+        self._counted_hub: "int | None" = None
+        # Eq. 9/10 re-derivation from measured transfer durations (cocodc
+        # only: the other methods have a fixed cadence)
+        self._resync: "adaptive_lib.ResyncState | None" = None
+        if ccfg.adaptive_resync and method == "cocodc":
+            self._resync = adaptive_lib.ResyncState()
 
         # host-side schedule + stats
         self.pending: List[PendingSync] = []
@@ -184,25 +232,118 @@ class ProtocolEngine:
             nbytes = int(nbytes * min(1.0, 2 * self.cfg.sync_topk_frac))
         return int(nbytes)
 
-    def _schedule_transfer(self, nbytes: int) -> float:
+    # ------------------------------------------------------- routed planning
+
+    def _active_plan(self, t: float) -> CommPlan:
+        """The routed plan valid at wall-time t, re-planning when t falls
+        outside the cached plan's validity window (either a
+        `LinkDynamics.next_change` edge passed, or t precedes a plan a queued
+        future transfer fetched — the window check is two-sided so a
+        wall-clock query never sees a future plan's state). Applies plan side
+        effects (Algorithm-2 cost vector, dark-region availability) on route
+        change; counting happens in `_note_plan_use` at transfer use only."""
+        if self._plan is not None and \
+                self._plan.valid_from <= t < self._plan.valid_until:
+            return self._plan
+        plan = self._planner.plan_at(t)
+        if self._plan is None or plan.route_key() != self._plan.route_key():
+            self._apply_plan(plan)
+        self._plan = plan
+        self._plan_time = float(t)
+        return plan
+
+    def _note_plan_use(self, plan: CommPlan, t: float):
+        """Count reroutes/hub elections against the last TRANSFER-used plan.
+        (Sampling at wall-clock refreshes instead would make the counters
+        depend on the host loop's cadence — per-step vs segment-scanned.)"""
+        key = plan.route_key()
+        if self._counted_key is not None and key != self._counted_key:
+            self.reroutes += 1
+            if plan.hub != self._counted_hub:
+                self.hub_elections += 1
+        self._counted_key = key
+        self._counted_hub = plan.hub
+        self._counted_time = float(t)
+
+    def _transfer_plan_fn(self, t: float) -> CommPlan:
+        """Plan fetch for transfer scheduling/integration: the active plan at
+        t, with the use counted."""
+        plan = self._active_plan(t)
+        self._note_plan_use(plan, t)
+        return plan
+
+    def _plan_frag_cost(self, plan: CommPlan) -> List[float]:
+        return [self.topology.plan_allreduce_time(
+                    plan, self._wire_bytes(self.frag.fragment_bytes(p)))
+                for p in range(self.K)]
+
+    def _apply_plan(self, plan: CommPlan):
+        """Plan side effects: refresh the Algorithm-2 cost vector from the
+        active routes, and toggle availability for regions the plan dropped
+        as dark. The availability each region had when it went dark (user
+        knob included) is recorded and restored VERBATIM on recovery, so the
+        planner never silently re-enables a user-disabled worker."""
+        self._frag_cost = self._plan_frag_cost(plan)
+        dark = set(range(self.M)) - set(plan.participants)
+        for r in sorted(dark - set(self._plan_dark)):
+            self._plan_dark[r] = bool(self.worker_available[r])
+            if self.worker_available[r]:
+                self.set_worker_availability(r, False)
+        for r in sorted(set(self._plan_dark) - dark):
+            if self._plan_dark.pop(r):
+                self.set_worker_availability(r, True)
+
+    def _schedule_transfer(self, nbytes: int) -> Tuple[float, float]:
         """Queue one collective of `nbytes` (raw f32) on the WAN: applies the
         wire format, grabs the earliest-free channel, accounts per-link
-        traffic. Returns the simulated completion wall-time.
+        traffic. Returns ``(finish_wall_time, measured_duration)`` (duration
+        excludes queueing — it is the Eq. 9 re-derivation's T_s sample).
 
         Static topologies keep the original closed-form arithmetic bitwise;
         with `Topology.dynamics` the finish time integrates the time-varying
         bottleneck bandwidth (and the engine-owned `_dyn_seq` counter makes
-        per-transfer jitter a pure function of serialized state)."""
+        per-transfer jitter a pure function of serialized state). With
+        routing enabled the collective executes over the ACTIVE CommPlan's
+        multi-hop routes and participants instead of the fixed formulas."""
         wire = self._wire_bytes(nbytes)
         ch = min(range(len(self._channel_free)),
                  key=lambda i: self._channel_free[i])
         start = max(self.wall_clock, self._channel_free[ch])
         dyn = self.topology.dynamics
-        if dyn is None:
+        if self._planner is not None:
+            jitter = 1.0
+            if dyn is not None:
+                jitter = dyn.jitter_mult(self._dyn_seq)
+                self._dyn_seq += 1
+            # re-plannable integration: if the routes go dark mid-transfer
+            # the collective re-forms on the fresh plan (fetched through
+            # `_transfer_plan_fn`, so reroute/election counters track it)
+            finish, nominal, retries, segments = \
+                self.topology.routed_transfer_time(
+                    self._transfer_plan_fn, wire, start, jitter=jitter)
+            # `(start + nominal) - start` loses an ulp vs nominal; on a static
+            # topology the routed accounting must equal the fixed-route path's
+            actual = (finish - start) if dyn is not None else nominal
+            self.n_retries += retries
+            self.stall_seconds += max(0.0, actual - nominal)
+            self.comm_seconds += actual
+            scale = (actual / nominal if nominal > 0 else 1.0)
+            # per-link traffic split across the plans that actually carried
+            # the payload (a re-formed transfer charges the stand-in routes
+            # for their share, not the abandoned dark ones)
+            for seg_plan, frac in segments:
+                if frac <= 0.0:
+                    continue
+                self.link_seconds += self.topology.plan_link_seconds(
+                    seg_plan, wire) * (scale * frac)
+                self.link_bytes += self.topology.plan_link_bytes(
+                    seg_plan, wire) * frac
+        elif dyn is None:
             t_s = self.topology.t_s(wire)
             finish = start + t_s
             self.comm_seconds += t_s
             self.link_seconds += self.topology.link_seconds(wire)
+            self.link_bytes += self.topology.link_bytes(wire)
         else:
             jitter = dyn.jitter_mult(self._dyn_seq)
             self._dyn_seq += 1
@@ -216,11 +357,11 @@ class ProtocolEngine:
             # link accounting reconciles with comm_seconds
             scale = (finish - start) / nominal if nominal > 0 else 1.0
             self.link_seconds += self.topology.link_seconds(wire) * scale
+            self.link_bytes += self.topology.link_bytes(wire)
         self._channel_free[ch] = finish
         self.bytes_sent += wire
         self.n_syncs += 1
-        self.link_bytes += self.topology.link_bytes(wire)
-        return finish
+        return finish, finish - start
 
     def _deliver_step_for(self, t: int, finish_time: float) -> int:
         """First step whose end-of-step wall-clock covers `finish_time`
@@ -233,14 +374,16 @@ class ProtocolEngine:
     # ------------------------------------------------------------ initiation
 
     def _initiate(self, t: int, params_stack, p: int):
-        finish = self._schedule_transfer(self.frag.fragment_bytes(p))
+        finish, duration = self._schedule_transfer(self.frag.fragment_bytes(p))
         self.state = self._fns.initiate(self.state, t, params_stack, p)
         self.pending.append(PendingSync(
             frag=p, t_init=t, deliver_at=self._deliver_step_for(t, finish),
-            finish_time=finish, seq=self._seq))
+            finish_time=finish, seq=self._seq, duration=duration))
         self._seq += 1
 
     def _select_cocodc(self, t: int, busy: set) -> int:
+        # _frag_cost tracks the wall-clock plan (refreshed in on_step_end
+        # before deliveries/initiations), so pricing sees the CURRENT routes
         costs = self._frag_cost if self.cfg.link_pricing else None
         return adaptive_lib.select_fragment(self.adaptive, t, busy, costs=costs)
 
@@ -261,6 +404,11 @@ class ProtocolEngine:
             return t + (self.H - 1 - t) % self.H
         h = self.h_stream if self.method == "streaming" else self.h_cocodc
         nxt = t if t % h == 0 else t + h - t % h
+        if self._resync is not None:
+            # Eq. 9 re-derivation runs in on_step_end at each outer-round
+            # boundary — that step must be a protocol event, or the segment
+            # loop would fuse it away and diverge from the per-step loop
+            nxt = min(nxt, t + (self.H - 1 - t) % self.H)
         for ev in self.pending:
             nxt = min(nxt, max(t, ev.deliver_at))
         return nxt
@@ -282,19 +430,30 @@ class ProtocolEngine:
 
         if self.method == "diloco":
             if (t + 1) % self.H == 0:
-                finish = self._schedule_transfer(self.frag.total_bytes)
+                finish, _ = self._schedule_transfer(self.frag.total_bytes)
                 self.wall_clock = max(self.wall_clock, finish)   # BLOCKING
                 self.state, params_stack = self._fns.diloco_round(
                     self.state, params_stack)
             return params_stack
 
-        # --- overlapped methods: deliveries due at this step ---------------
+        # --- overlapped methods ---------------------------------------------
+        if self._planner is not None:
+            # roll the plan state to the CURRENT wall-clock before any device
+            # decision this step (a queued future transfer may have pulled
+            # the cached plan ahead of simulated time — availability and
+            # pricing must reflect now, not the future)
+            self._active_plan(self.wall_clock)
+
+        # deliveries due at this step
         due = sorted((ev for ev in self.pending if ev.deliver_at <= t),
                      key=lambda e: (e.deliver_at, e.seq))
         for ev in due:
             self.state, params_stack = self._fns.deliver(
                 self.state, t, params_stack, ev.frag)
             self.pending.remove(ev)
+            if self._resync is not None:
+                # a COMPLETED transfer's measured duration is shared history
+                self._resync.observe(ev.duration)
 
         # --- initiations ----------------------------------------------------
         if self.method == "streaming":
@@ -308,6 +467,13 @@ class ProtocolEngine:
                 if len(busy) < self.K:
                     p = self._select_cocodc(t, busy)
                     self._initiate(t, params_stack, p)
+            if self._resync is not None and (t + 1) % self.H == 0:
+                # end of an outer round: re-derive Eq. 9's N / Eq. 10's h
+                # from the measured T_s so next round's cadence tracks the
+                # network the run actually sees
+                self.N, self.h_cocodc = adaptive_lib.rederive_schedule(
+                    self._resync, self.K, self.H, self.topology.t_c,
+                    self.cfg.net_utilization, self._t_s_startup)
         return params_stack
 
     # ---------------------------------------------------------- checkpointing
@@ -319,7 +485,7 @@ class ProtocolEngine:
         itself lives in TrainerState (single authority), not here."""
         return {
             "pending": [[ev.frag, ev.t_init, ev.deliver_at, ev.finish_time,
-                         ev.seq] for ev in self.pending],
+                         ev.seq, ev.duration] for ev in self.pending],
             "seq": self._seq,
             "comm_seconds": self.comm_seconds,
             "bytes_sent": self.bytes_sent,
@@ -333,13 +499,35 @@ class ProtocolEngine:
             "dyn_seq": self._dyn_seq,
             "stall_seconds": self.stall_seconds,
             "n_retries": self.n_retries,
+            # routed-planner state: the active plan is a pure function of its
+            # plan time, so serializing the TIME (plus counters and the
+            # planner-dropped regions) replays mid-outage resume bitwise
+            "routing": {
+                "plan_time": (-1.0 if self._plan_time is None
+                              else float(self._plan_time)),
+                "counted_time": (-1.0 if self._counted_time is None
+                                 else float(self._counted_time)),
+                "plan_dark": [[int(r), bool(prior)] for r, prior
+                              in sorted(self._plan_dark.items())],
+                "reroutes": int(self.reroutes),
+                "hub_elections": int(self.hub_elections),
+            },
+            # Eq. 9/10 re-derivation window + the currently derived cadence
+            "resync": {
+                "measured": ([] if self._resync is None
+                             else [float(x) for x in self._resync.measured]),
+                "N": int(self.N),
+                "h_cocodc": int(self.h_cocodc),
+            },
         }
 
     def restore_scheduler(self, st: Dict[str, object]):
         """Inverse of `scheduler_state` (EngineState is restored separately)."""
         self.pending = [PendingSync(frag=int(r[0]), t_init=int(r[1]),
                                     deliver_at=int(r[2]),
-                                    finish_time=float(r[3]), seq=int(r[4]))
+                                    finish_time=float(r[3]), seq=int(r[4]),
+                                    # absent in pre-routing checkpoints
+                                    duration=float(r[5]) if len(r) > 5 else 0.0)
                         for r in st["pending"]]
         self._seq = int(st["seq"])
         self.comm_seconds = float(st["comm_seconds"])
@@ -353,6 +541,39 @@ class ProtocolEngine:
         self._dyn_seq = int(st.get("dyn_seq", 0))
         self.stall_seconds = float(st.get("stall_seconds", 0.0))
         self.n_retries = int(st.get("n_retries", 0))
+        routing = st.get("routing") or {}
+        self.reroutes = int(routing.get("reroutes", 0))
+        self.hub_elections = int(routing.get("hub_elections", 0))
+        self._plan_dark = {int(row[0]): bool(row[1])
+                           for row in routing.get("plan_dark", [])}
+        plan_time = float(routing.get("plan_time", -1.0))
+        self._plan = None
+        self._plan_time = None
+        self._counted_time = None
+        self._counted_key = None
+        self._counted_hub = None
+        if self._planner is not None:
+            if plan_time >= 0.0:
+                # re-derive the active plan from its serialized plan time
+                # (pure function) and refresh the cost vector from it;
+                # availability was restored above/inside EngineState, so no
+                # side effects re-run
+                self._plan_time = plan_time
+                self._plan = self._planner.plan_at(plan_time)
+                self._frag_cost = self._plan_frag_cost(self._plan)
+            counted_time = float(routing.get("counted_time", -1.0))
+            if counted_time >= 0.0:
+                counted = self._planner.plan_at(counted_time)
+                self._counted_time = counted_time
+                self._counted_key = counted.route_key()
+                self._counted_hub = counted.hub
+        resync = st.get("resync") or {}
+        if self._resync is not None:
+            self._resync.measured = [float(x)
+                                     for x in resync.get("measured", [])]
+        if resync:
+            self.N = int(resync.get("N", self.N))
+            self.h_cocodc = int(resync.get("h_cocodc", self.h_cocodc))
 
     # ---------------------------------------------------------------- stats
 
@@ -371,6 +592,8 @@ class ProtocolEngine:
             "stall_fraction": float(0.0 if self.comm_seconds == 0 else
                                     self.stall_seconds / self.comm_seconds),
             "n_retries": float(self.n_retries),
+            "reroutes": float(self.reroutes),
+            "hub_elections": float(self.hub_elections),
         }
 
     def link_stats(self) -> Dict[str, object]:
@@ -390,4 +613,7 @@ class ProtocolEngine:
             busiest = max(links, key=lambda k: links[k]["busy_seconds"])
         return {"links": links, "busiest_link": busiest,
                 "collective": self.topology.collective,
+                "routing": self.cfg.routing,
+                "hub": int(self._plan.hub if self._plan is not None
+                           else self.topology.hub),
                 "regions": list(regions)}

@@ -414,14 +414,19 @@ class CrossRegionTrainer:
                 "num_workers": c.num_workers, "local_steps": c.local_steps,
                 "num_fragments": c.num_fragments,
                 "overlap_depth": c.overlap_depth,
-                "fragment_strategy": self.fragmenter.strategy}
+                "fragment_strategy": self.fragmenter.strategy,
+                "routing": c.routing, "hub_failover": c.hub_failover,
+                "adaptive_resync": c.adaptive_resync}
 
     def _traj_meta_defaults(self) -> Dict[str, Any]:
         """Meta keys added after trainer_state_v1 shipped: a checkpoint
         written before a key existed implies whatever the key-less code did
-        with THIS config (pre-PR3 fragmentation came from strided_fragments)."""
+        with THIS config (pre-PR3 fragmentation came from strided_fragments;
+        pre-PR4 runs had no routed planner or Eq. 9 re-derivation)."""
         return {"fragment_strategy":
-                "strided" if self.ccfg.strided_fragments else "contiguous"}
+                "strided" if self.ccfg.strided_fragments else "contiguous",
+                "routing": "static", "hub_failover": False,
+                "adaptive_resync": False}
 
     def save_checkpoint(self, path: str):
         save_pytree(path, self.checkpoint_state())

@@ -31,7 +31,9 @@ def build(args):
         num_fragments=args.fragments, overlap_depth=args.tau,
         comp_lambda=args.comp_lambda, net_utilization=args.gamma,
         mixing_alpha=args.alpha, link_pricing=args.link_pricing,
-        fragment_strategy=args.fragment_strategy)
+        fragment_strategy=args.fragment_strategy,
+        routing=args.routing, hub_failover=args.hub_failover,
+        adaptive_resync=args.adaptive_resync)
     tcfg = TrainerConfig(
         method=args.method, local_batch=args.local_batch, seq_len=args.seq_len,
         total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
@@ -101,6 +103,22 @@ def main(argv=None):
                          "one-dispatch-per-step loop")
     ap.add_argument("--link-pricing", action="store_true",
                     help="Algorithm-2 link-aware fragment pricing (R_p/T_s,p)")
+    ap.add_argument("--routing", default="static",
+                    choices=["static", "routed"],
+                    help="routed communication plans: every collective runs "
+                         "over deterministic multi-hop min-cost routes "
+                         "computed against the CURRENT link state, re-planned "
+                         "at each dynamics edge (static = fixed "
+                         "ring/hierarchical formulas, bitwise PR 3 behavior)")
+    ap.add_argument("--hub-failover", action="store_true",
+                    help="with --routing routed: re-elect the next-best-"
+                         "connected region as hub while the declared hub's "
+                         "links are out (restored on recovery); fully dark "
+                         "regions drop out of the collective")
+    ap.add_argument("--adaptive-resync", action="store_true",
+                    help="re-derive Eq. 9's target sync count N (and Eq. "
+                         "10's h) each outer round from measured transfer "
+                         "durations (cocodc)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="atomically checkpoint the FULL run state to --ckpt "
@@ -157,6 +175,9 @@ def main(argv=None):
         print(f"dynamic links: stalled {stats['stall_seconds']:.1f}s "
               f"({stats['stall_fraction']*100:.0f}% of WAN time), "
               f"{int(stats['n_retries'])} outage retries", flush=True)
+    if args.routing == "routed":
+        print(f"routed planner: {int(stats['reroutes'])} reroutes, "
+              f"{int(stats['hub_elections'])} hub elections", flush=True)
     if link_stats["links"]:
         print("per-link WAN traffic:", flush=True)
         for link, rec in sorted(link_stats["links"].items()):

@@ -22,6 +22,20 @@ def test_eq9_floor_at_K():
     assert target_syncs(K=4, H=100, t_c=1.0, t_s=1e9, gamma=0.4) == 4
 
 
+def test_state_defaults_are_per_instance():
+    """The K/H-derived defaults come from default_factory + __post_init__
+    fill-in: instances never share a mutable default, and explicit lists are
+    taken as-is."""
+    a = AdaptiveState(K=3, H=10)
+    b = AdaptiveState(K=3, H=10)
+    assert a.last_sync == [-10] * 3 and a.rate == [math.inf] * 3
+    a.last_sync[0] = 99
+    a.rate[0] = 1.0
+    assert b.last_sync[0] == -10 and b.rate[0] == math.inf
+    c = AdaptiveState(K=2, H=5, last_sync=[1, 2], rate=[0.5, 0.25])
+    assert c.last_sync == [1, 2] and c.rate == [0.5, 0.25]
+
+
 def test_initial_priority_is_unsynced():
     st8 = AdaptiveState(K=4, H=100)
     # before any sync completes, rates are +inf and last_sync=-H => anti-starvation

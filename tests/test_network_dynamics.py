@@ -441,7 +441,8 @@ def test_sweep_validate_payload_catches_drift():
               "stats": {k: 1.0 for k in
                         ("wall_clock_s", "comm_seconds", "bytes_sent",
                          "n_syncs", "overlap_ratio", "stall_seconds",
-                         "stall_fraction", "n_retries", "busiest_link_bytes",
+                         "stall_fraction", "n_retries", "reroutes",
+                         "hub_elections", "busiest_link_bytes",
                          "busiest_link_seconds")},
               "link_stats": {"links": {"a->b": {}}}}}}
     validate_payload(ok, "ok")                     # no raise
@@ -453,3 +454,53 @@ def test_sweep_validate_payload_catches_drift():
         k: v for k, v in ok["runs"]["cocodc"].items() if k != "stats"}}}
     with pytest.raises(AssertionError, match="stats"):
         validate_payload(missing, "missing")
+
+
+def test_sweep_bw_autocalibration_is_bandwidth_dominated():
+    """Auto-calibrated bw_scale puts every grid topology's mean-fragment
+    collective at CALIB_BW_STEPS bandwidth-seconds — strictly above its
+    latency phases, so the dynamics under test actually bite."""
+    from benchmarks.sweep import (CALIB_BW_STEPS, SCENARIOS, build_network,
+                                  fragment_wire_bytes)
+    fb = fragment_wire_bytes()
+    checked = 0
+    for sc in SCENARIOS:
+        if sc.mesh is None and sc.topology is None:
+            continue
+        net = build_network(sc)
+        lat = net.allreduce_time(0)
+        # the pure bandwidth phase (latency-free copy) hits the target exactly
+        lat_free = dataclasses.replace(net,
+                                       latency_s=np.zeros_like(net.latency_s))
+        assert lat_free.allreduce_time(fb) == pytest.approx(
+            CALIB_BW_STEPS * net.step_time_s, rel=1e-9), sc.name
+        # and on the real mesh the transfer stays bandwidth-dominated
+        assert net.allreduce_time(fb) - lat > lat, sc.name
+        checked += 1
+    assert checked >= 6
+    # the override field still wins over the calibration
+    import dataclasses as dc
+    sc = next(s for s in SCENARIOS if s.name == "hub_failure8")
+    net_auto = build_network(sc)
+    net_fixed = build_network(dc.replace(sc, bw_scale=1.0))
+    assert float(net_fixed.bandwidth_Bps[0, 1]) != \
+        float(net_auto.bandwidth_Bps[0, 1])
+
+
+def test_sweep_compare_routed_contract():
+    """--smoke fails iff the routed run's stall_fraction is not STRICTLY
+    below its static twin's."""
+    from benchmarks.sweep import compare_routed
+
+    def payload(sf):
+        return {"runs": {"cocodc": {"stats": {
+            "stall_fraction": sf, "reroutes": 1.0, "hub_elections": 2.0}}}}
+
+    worse = compare_routed({"hub_failure8": payload(0.1),
+                            "hub_failure8_routed": payload(0.1)})
+    assert worse and "not strictly below" in worse[0]
+    better = compare_routed({"hub_failure8": payload(0.2),
+                             "hub_failure8_routed": payload(0.05)})
+    assert better == []
+    # a lone scenario (no twin present) is not comparable -> no failure
+    assert compare_routed({"hub_failure8": payload(0.2)}) == []

@@ -1,0 +1,518 @@
+"""Routed collective planner: multi-hop routes, hub failover, network-aware
+adaptive transmission, and the determinism/serialization contracts.
+
+The planner's core claim mirrors Algorithm 2's: `RoutePlanner.plan_at(t)` is a
+pure function of wall-time against the shared dynamics clock, so every region
+elects the same hub and computes identical routes with zero coordination —
+and a mid-outage kill/resume re-derives the active plan from the serialized
+plan time alone (bitwise trajectory, pinned below).
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CoCoDCConfig, ModelConfig
+from repro.core import adaptive as adaptive_lib
+from repro.core.fragments import make_fragmenter
+from repro.core.network import (LinkDynamics, LinkEvent, RoutePlanner,
+                                Topology, apply_dynamics, generate_mesh,
+                                make_scenario)
+from repro.core.protocol import ProtocolEngine
+from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+from repro.models import api
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+KEY = jax.random.PRNGKey(0)
+TINY = ModelConfig(name="tiny", family="dense", n_layers=4, d_model=64,
+                   n_heads=2, n_kv_heads=1, d_ff=128, vocab=128,
+                   compute_dtype="float32")
+
+
+def engine_for(method, network, M=4, H=8, K=2, tau=2, **ccfg_kw):
+    ccfg = CoCoDCConfig(num_workers=M, local_steps=H, num_fragments=K,
+                        overlap_depth=tau, **ccfg_kw)
+    params = api.init_params(TINY, KEY)
+    stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (M,) + a.shape).copy(), params)
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+    frag = make_fragmenter(TINY, shape, K)
+    return ProtocolEngine(method, ccfg, frag, network, stack,
+                          engine_impl="host"), stack, frag
+
+
+def scaled_hub_mesh(n=8, seed=0, bw_steps=4.0, frag_bytes=500_000):
+    """Generated hub_spoke mesh scaled so one fragment collective spends
+    ~bw_steps compute steps in bandwidth (dynamics actually bite)."""
+    base = generate_mesh(n, "hub_spoke", seed=seed)
+    bw_part = base.allreduce_time(frag_bytes) - base.allreduce_time(0)
+    return dataclasses.replace(
+        base, bandwidth_Bps=base.bandwidth_Bps * (bw_part / bw_steps))
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", [
+    generate_mesh(6, "ring", seed=1),
+    generate_mesh(6, "hub_spoke", seed=1),
+    make_scenario("asym4"),
+], ids=["ring6", "hub6", "asym4"])
+def test_healthy_plan_matches_static_formulas(topo):
+    """On a healthy network the plan is single-hop direct routes and its cost
+    model reproduces the fixed formulas EXACTLY (same arithmetic)."""
+    plan = RoutePlanner(topo, ref_bytes=500_000).plan_at(0.0)
+    assert not plan.is_multi_hop
+    assert plan.participants == tuple(range(topo.num_workers))
+    assert plan.hub == topo.hub
+    assert set(plan.logical) == set(topo._links())
+    for nbytes in (0, 1_000_000, 31_337_000):
+        assert topo.plan_allreduce_time(plan, nbytes) == \
+            topo.allreduce_time(nbytes)
+        np.testing.assert_array_equal(topo.plan_link_bytes(plan, nbytes),
+                                      topo.link_bytes(nbytes))
+        np.testing.assert_array_equal(topo.plan_link_seconds(plan, nbytes),
+                                      topo.link_seconds(nbytes))
+    assert topo.plan_n_latency_phases(plan) == topo.n_latency_phases
+    # static topology: the plan never expires
+    assert plan.valid_until == float("inf")
+
+
+def test_multi_hop_routes_around_degraded_link():
+    """A dark direct link with a healthy 2-hop detour: the planner routes the
+    logical link through the intermediate region and the plan's cost uses the
+    detour's links."""
+    m = 3
+    lat = np.full((m, m), 0.01)
+    np.fill_diagonal(lat, 0.0)
+    bw = np.full((m, m), 1e6)
+    np.fill_diagonal(bw, np.inf)
+    topo = Topology(latency_s=lat, bandwidth_Bps=bw).with_dynamics(
+        LinkDynamics(events=(
+            LinkEvent(0.0, 100.0, 0, 1, bandwidth_factor=0.0),)))
+    plan = RoutePlanner(topo, ref_bytes=1_000_000).plan_at(1.0)
+    by_logical = dict(zip(plan.logical, plan.routes))
+    assert by_logical[(0, 1)] == ((0, 2), (2, 1))    # detour around the dark
+    assert by_logical[(1, 2)] == ((1, 2),)           # healthy links stay
+    assert by_logical[(2, 0)] == ((2, 0),)           # direct
+    assert plan.is_multi_hop
+    # the detour's transfer never waits on the dark link
+    finish, nominal, retries = topo.plan_transfer_time(plan, 1_000_000, 1.0)
+    assert retries == 0
+    assert finish == 1.0 + nominal
+    # whereas the fixed-route path parks until recovery at t=100
+    finish_static, _, _ = topo.transfer_time(1_000_000, 1.0)
+    assert finish_static > 100.0
+
+
+def test_degraded_but_usable_direct_link_can_reroute():
+    """Routing weighs EFFECTIVE bandwidth: a 10x-degraded (not dark) direct
+    link loses to a healthy detour when the payload is bandwidth-bound."""
+    m = 3
+    lat = np.full((m, m), 1e-4)
+    np.fill_diagonal(lat, 0.0)
+    bw = np.full((m, m), 1e6)
+    np.fill_diagonal(bw, np.inf)
+    topo = Topology(latency_s=lat, bandwidth_Bps=bw).with_dynamics(
+        LinkDynamics(events=(
+            LinkEvent(0.0, 100.0, 0, 1, bandwidth_factor=0.1,
+                      symmetric=False),)))
+    plan = RoutePlanner(topo, ref_bytes=1_000_000).plan_at(1.0)
+    assert dict(zip(plan.logical, plan.routes))[(0, 1)] == ((0, 2), (2, 1))
+
+
+def test_hub_failover_elects_and_restores():
+    topo = apply_dynamics(generate_mesh(8, "hub_spoke", seed=0),
+                          "hub_failure:start=24:dur=16", seed=0)
+    pl = RoutePlanner(topo, hub_failover=True, ref_bytes=500_000)
+    before, during, after = pl.plan_at(0.0), pl.plan_at(30.0), pl.plan_at(41.0)
+    assert before.hub == topo.hub and before.participants == tuple(range(8))
+    assert during.hub != topo.hub
+    assert topo.hub not in during.participants
+    assert len(during.participants) == 7
+    # the stand-in hub is the best-connected surviving region, deterministic
+    assert during.hub == pl.elect_hub(30.0)
+    assert after.hub == topo.hub and after.participants == tuple(range(8))
+    # validity windows track the outage edges
+    assert before.valid_until == 24.0
+    assert during.valid_until == 40.0
+    # without failover the declared hub stays and the plan keeps its links
+    pl_no = RoutePlanner(topo, hub_failover=False, ref_bytes=500_000)
+    assert pl_no.plan_at(30.0).hub == topo.hub
+    assert pl_no.plan_at(30.0).participants == tuple(range(8))
+
+
+def test_total_blackout_falls_back_to_stall():
+    """Every region dark -> the plan keeps everyone on direct routes (the
+    transfer waits for recovery like the static path; completion may not be
+    conjured out of a dead network)."""
+    m = 2
+    lat = np.zeros((m, m))
+    bw = np.full((m, m), 1e6)
+    np.fill_diagonal(bw, np.inf)
+    topo = Topology(latency_s=lat, bandwidth_Bps=bw).with_dynamics(
+        LinkDynamics(events=(
+            LinkEvent(0.0, 50.0, 0, 1, bandwidth_factor=0.0),)))
+    plan = RoutePlanner(topo, hub_failover=True, ref_bytes=1000).plan_at(1.0)
+    assert plan.participants == (0, 1)
+    finish, _, retries = topo.plan_transfer_time(plan, 1_000_000, 1.0)
+    assert finish > 50.0 and retries == 1
+
+
+# ---------------------------------------------------------------------------
+# planner determinism (the zero-coordination claim)
+# ---------------------------------------------------------------------------
+
+
+def _region_planner(profile, n, seed, spec):
+    """One region's independently constructed planner: same shared mesh seed
+    and dynamics spec, fresh objects (nothing shared in memory)."""
+    topo = generate_mesh(n, profile, seed=seed)
+    topo = apply_dynamics(topo, spec, seed=seed)
+    return RoutePlanner(topo, hub_failover=True, ref_bytes=250_000)
+
+
+def _check_planner_determinism(profile, n, seed, times):
+    """Every region, given the same shared history (mesh seed) and dynamics
+    clock (query times), elects the same hub and computes identical routes —
+    the zero-coordination claim extended to routing."""
+    spec = "diurnal:period=48:depth=0.6,hub_failure:start=40:dur=24"
+    a = _region_planner(profile, n, seed, spec)
+    b = _region_planner(profile, n, seed, spec)
+    for t in times:
+        pa, pb = a.plan_at(t), b.plan_at(t)
+        assert pa.hub == pb.hub
+        assert pa.participants == pb.participants
+        assert pa.routes == pb.routes
+        assert pa.valid_until == pb.valid_until
+        assert pa.route_key() == pb.route_key()
+
+
+try:                                                   # optional dev dep
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(profile=st.sampled_from(["hub_spoke", "random_geo", "ring"]),
+           n=st.integers(3, 8), seed=st.integers(0, 50),
+           times=st.lists(st.floats(0.0, 200.0, allow_nan=False),
+                          min_size=1, max_size=6))
+    def test_planner_determinism_across_regions(profile, n, seed, times):
+        _check_planner_determinism(profile, n, seed, times)
+except ImportError:
+    pass
+
+
+@pytest.mark.parametrize("profile", ["hub_spoke", "random_geo", "ring"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_planner_determinism_fixed_cases(profile, seed):
+    """Deterministic pinned cases of the property above (always run, even
+    without hypothesis): query times straddle the trough, the outage, and
+    recovery."""
+    _check_planner_determinism(profile, 8, seed,
+                               [0.0, 12.5, 41.0, 55.0, 64.0, 199.0])
+
+
+# ---------------------------------------------------------------------------
+# engine under the routed planner
+# ---------------------------------------------------------------------------
+
+
+def _hub_failure_net(n=8, start=12, dur=16):
+    return apply_dynamics(scaled_hub_mesh(n), f"hub_failure:start={start}:"
+                                              f"dur={dur}", seed=0)
+
+
+def test_engine_routed_beats_static_on_hub_failure():
+    """The acceptance behavior at engine scale: with failover the hub-outage
+    window completes (deliveries during the window, strictly lower stall
+    fraction) and the election sequence is failover -> restore."""
+    net = _hub_failure_net()
+    e_static, stack_s, _ = engine_for("cocodc", net, M=8, H=24, K=4)
+    e_routed, stack_r, _ = engine_for("cocodc", net, M=8, H=24, K=4,
+                                      routing="routed", hub_failover=True)
+    for t in range(48):
+        stack_s = e_static.on_step_end(t, stack_s)
+        stack_r = e_routed.on_step_end(t, stack_r)
+    ss, sr = e_static.stats(), e_routed.stats()
+    assert sr["stall_fraction"] < ss["stall_fraction"]
+    assert sr["reroutes"] >= 2           # outage reroute + recovery restore
+    assert sr["hub_elections"] == 2      # stand-in elected, declared restored
+    assert ss["reroutes"] == 0 and ss["hub_elections"] == 0
+    # availability returns to full once the hub recovers
+    assert all(e_routed.worker_available)
+    # the routed run keeps syncing THROUGH the window instead of queueing
+    # behind the stalled collective
+    assert sr["n_syncs"] >= ss["n_syncs"]
+
+
+def test_failover_preserves_user_disabled_workers():
+    """The planner records each dark region's availability as it found it and
+    restores it VERBATIM on recovery — it never re-enables a worker the user
+    took offline (maintenance), whether or not that worker also went dark."""
+    net = _hub_failure_net()
+    eng, stack, _ = engine_for("cocodc", net, M=8, H=24, K=4,
+                               routing="routed", hub_failover=True)
+    eng.set_worker_availability(0, False)    # user had taken the hub offline
+    eng.set_worker_availability(2, False)    # ... and a spoke
+    for t in range(48):
+        stack = eng.on_step_end(t, stack)
+    # the outage came and went: planner bookkeeping restored, user's not
+    assert not eng.worker_available[0]
+    assert not eng.worker_available[2]
+    assert all(eng.worker_available[r] for r in (1, 3, 4, 5, 6, 7))
+    mask = np.asarray(eng.state.worker_available)
+    assert list(mask) == [bool(x) for x in eng.worker_available]
+    assert eng._plan_dark == {}              # nothing left marked dark
+
+
+def test_routed_static_network_matches_fixed_routes():
+    """On a static topology the routed engine reproduces the fixed-route
+    delivery schedule exactly (healthy plans are direct routes)."""
+    net = make_scenario("asym4")
+    e_fixed, stack_f, _ = engine_for("streaming", net, M=4)
+    e_routed, stack_r, _ = engine_for("streaming", net, M=4,
+                                      routing="routed")
+    for t in range(24):
+        stack_f = e_fixed.on_step_end(t, stack_f)
+        stack_r = e_routed.on_step_end(t, stack_r)
+    assert [(-e.seq, e.frag, e.deliver_at, e.finish_time)
+            for e in e_fixed.pending] == \
+        [(-e.seq, e.frag, e.deliver_at, e.finish_time)
+         for e in e_routed.pending]
+    sf, sr = e_fixed.stats(), e_routed.stats()
+    for k in ("wall_clock_s", "comm_seconds", "bytes_sent", "n_syncs"):
+        assert sf[k] == sr[k], k
+    np.testing.assert_array_equal(e_fixed.link_bytes, e_routed.link_bytes)
+    np.testing.assert_array_equal(e_fixed.link_seconds, e_routed.link_seconds)
+
+
+def test_routing_config_validation():
+    net = make_scenario("asym4")
+    with pytest.raises(ValueError, match="hub_failover"):
+        engine_for("cocodc", net, M=4, hub_failover=True)
+    with pytest.raises(ValueError, match="routing"):
+        engine_for("cocodc", net, M=4, routing="quantum")
+
+
+def test_link_pricing_costs_refresh_from_plan():
+    """During the outage the Algorithm-2 cost vector prices fragments against
+    the failover plan, not the startup topology."""
+    net = _hub_failure_net()
+    eng, stack, _ = engine_for("cocodc", net, M=8, H=24, K=4,
+                               routing="routed", hub_failover=True,
+                               link_pricing=True)
+    startup = list(eng._frag_cost)
+    for t in range(20):                      # into the outage window
+        stack = eng.on_step_end(t, stack)
+    assert eng._frag_cost != startup
+    # cost vector equals the active plan's pricing exactly
+    assert eng._frag_cost == eng._plan_frag_cost(eng._plan)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 9/10 re-derivation from measured transfers
+# ---------------------------------------------------------------------------
+
+
+def test_resync_state_window_and_estimate():
+    rs = adaptive_lib.ResyncState(window=3)
+    assert rs.t_s_estimate is None
+    for v in (2.0, 4.0, 6.0, 8.0):
+        rs.observe(v)
+    assert rs.measured == [4.0, 6.0, 8.0]            # bounded window
+    assert rs.t_s_estimate == 6.0
+    n, h = adaptive_lib.rederive_schedule(rs, K=4, H=100, t_c=1.0, gamma=0.4,
+                                          fallback_t_s=5.0)
+    assert n == adaptive_lib.target_syncs(4, 100, 1.0, 6.0, 0.4)
+    assert h == adaptive_lib.sync_interval(100, n)
+    # empty window falls back to the startup estimate (paper numbers)
+    n0, h0 = adaptive_lib.rederive_schedule(
+        adaptive_lib.ResyncState(), K=4, H=100, t_c=1.0, gamma=0.4,
+        fallback_t_s=5.0)
+    assert (n0, h0) == (8, 12)
+
+
+def test_engine_rederives_N_when_network_slows():
+    """A persistent degradation doubles the measured T_s; after one outer
+    round Eq. 9's N (and the initiation interval h) adapt to it."""
+    base = Topology.uniform(4, latency_s=0.01, bandwidth_Bps=1.0)
+    _, _, frag = engine_for("cocodc", base, M=4)
+    # calibrate so one fragment costs ~2 steps at full rate -> N = 4 = K, and
+    # gamma*H*t_c/t_s is large enough that halving the bandwidth changes N
+    ccfg_bw = base.allreduce_time(frag.fragment_bytes(0)) / 2.0
+    net = dataclasses.replace(base, bandwidth_Bps=base.bandwidth_Bps * ccfg_bw)
+    slow = apply_dynamics(net, "degrade:start=0:dur=1000000:factor=0.25:"
+                               "link=0-1", seed=0)
+    eng, stack, _ = engine_for("cocodc", slow, M=4, H=16, K=2,
+                               adaptive_resync=True)
+    n_start, h_start = eng.N, eng.h_cocodc
+    for t in range(32):                               # two outer rounds
+        stack = eng.on_step_end(t, stack)
+    assert eng._resync is not None and eng._resync.measured
+    # the measured T_s exceeds the startup estimate -> fewer target syncs
+    assert eng._resync.t_s_estimate > eng._t_s_startup
+    assert eng.N <= n_start and eng.h_cocodc >= h_start
+    assert (eng.N, eng.h_cocodc) != (n_start, h_start)
+    # without the flag nothing moves
+    eng2, stack2, _ = engine_for("cocodc", slow, M=4, H=16, K=2)
+    for t in range(32):
+        stack2 = eng2.on_step_end(t, stack2)
+    assert (eng2.N, eng2.h_cocodc) == (eng2.N, eng2.h_cocodc)
+    assert eng2._resync is None
+
+
+# ---------------------------------------------------------------------------
+# serialization: scheduler round-trip + mid-outage kill/resume
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_state_roundtrips_planner_and_resync():
+    net = _hub_failure_net()
+    eng, stack, _ = engine_for("cocodc", net, M=8, H=24, K=4,
+                               routing="routed", hub_failover=True,
+                               adaptive_resync=True)
+    for t in range(20):                     # into the outage: plan is live
+        stack = eng.on_step_end(t, stack)
+    assert eng._plan is not None
+    st = eng.scheduler_state()
+    eng2, _, _ = engine_for("cocodc", net, M=8, H=24, K=4,
+                            routing="routed", hub_failover=True,
+                            adaptive_resync=True)
+    eng2.restore_scheduler(st)
+    assert eng2.reroutes == eng.reroutes
+    assert eng2.hub_elections == eng.hub_elections
+    assert eng2._plan_time == eng._plan_time
+    assert eng2._plan.route_key() == eng._plan.route_key()
+    assert eng2._plan_dark == eng._plan_dark
+    assert eng2._frag_cost == eng._frag_cost
+    assert eng2._resync.measured == eng._resync.measured
+    assert (eng2.N, eng2.h_cocodc) == (eng.N, eng.h_cocodc)
+    assert [e.duration for e in eng2.pending] == \
+        [e.duration for e in eng.pending]
+    # legacy checkpoints (pre-routing: 5-element pending rows, no new keys)
+    legacy = {k: v for k, v in st.items() if k not in ("routing", "resync")}
+    legacy["pending"] = [r[:5] for r in st["pending"]]
+    eng3, _, _ = engine_for("cocodc", net, M=8, H=24, K=4)
+    eng3.restore_scheduler(legacy)
+    assert eng3.reroutes == 0 and eng3._plan is None
+    assert [e.seq for e in eng3.pending] == [e.seq for e in eng.pending]
+
+
+def _routed_trainer(seed=0):
+    mcfg = dataclasses.replace(TINY, name="routed-ck")
+    ccfg = CoCoDCConfig(num_workers=4, local_steps=8, num_fragments=2,
+                        overlap_depth=2, routing="routed", hub_failover=True,
+                        adaptive_resync=True)
+    tcfg = TrainerConfig(method="cocodc", local_batch=2, seq_len=16,
+                         total_steps=24, warmup_steps=4, inner_lr=3e-3,
+                         eval_batch=4, seed=seed)
+    net = apply_dynamics(scaled_hub_mesh(4, bw_steps=3.0),
+                         "hub_failure:start=6:dur=8", seed=7)
+    return CrossRegionTrainer(mcfg, ccfg, tcfg, network=net)
+
+
+def test_mid_outage_kill_and_resume_bitwise(tmp_path):
+    """Kill the run INSIDE the hub-outage window (failover hub active,
+    fragment in flight), resume, and require the bitwise trajectory, stats,
+    and hub-election history of the uninterrupted run — the planner state
+    must re-derive from the serialized plan time."""
+    ck = os.path.join(tmp_path, "routed.msgpack")
+
+    ref = _routed_trainer()
+    ref.run(eval_every=8, log=lambda s: None)
+    assert ref.engine.hub_elections >= 2      # failover AND restore happened
+
+    tr = _routed_trainer()
+    tr.run(steps=8, eval_every=8, log=lambda s: None)   # inside [6, 14)
+    while not tr.engine.pending and tr.step < 13:
+        tr.run(steps=tr.step + 1, eval_every=8, log=lambda s: None)
+    assert tr.engine.pending, "no mid-outage in-flight state to checkpoint"
+    assert tr.engine.hub_elections >= 1       # the stand-in hub is active
+    tr.save_checkpoint(ck)
+
+    resumed = _routed_trainer().restore_checkpoint(ck)
+    assert resumed.engine.hub_elections == tr.engine.hub_elections
+    assert resumed.engine._plan.route_key() == tr.engine._plan.route_key()
+    resumed.run(eval_every=8, log=lambda s: None)
+
+    ra = {r["step"]: r for r in ref.history}
+    rb = {r["step"]: r for r in resumed.history}
+    shared = sorted(set(ra) & set(rb))
+    assert shared
+    for s in shared:
+        assert ra[s]["nll"] == rb[s]["nll"]
+        assert ra[s]["wall_clock_s"] == rb[s]["wall_clock_s"]
+        assert ra[s]["stall_seconds"] == rb[s]["stall_seconds"]
+        assert ra[s]["reroutes"] == rb[s]["reroutes"]
+        assert ra[s]["hub_elections"] == rb[s]["hub_elections"]
+    sa, sb = ref.engine.stats(), resumed.engine.stats()
+    for k in sa:
+        assert sa[k] == sb[k], f"stats[{k}]: {sa[k]} vs {sb[k]}"
+    np.testing.assert_array_equal(ref.engine.link_bytes,
+                                  resumed.engine.link_bytes)
+    np.testing.assert_array_equal(ref.engine.link_seconds,
+                                  resumed.engine.link_seconds)
+    for x, y in zip(jax.tree.leaves(ref.params_stack),
+                    jax.tree.leaves(resumed.params_stack)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_segment_loop_matches_per_step_with_resync():
+    """Eq. 9 re-derivation happens at outer-round boundaries, which the
+    segment loop only visits if they are protocol events — pinned here with
+    eval boundaries deliberately MISALIGNED with H so a fused-away round
+    boundary would diverge from the per-step loop."""
+    def build(loop):
+        mcfg = dataclasses.replace(TINY, name="resync-loop")
+        ccfg = CoCoDCConfig(num_workers=4, local_steps=6, num_fragments=2,
+                            overlap_depth=2, routing="routed",
+                            hub_failover=True, adaptive_resync=True)
+        tcfg = TrainerConfig(method="cocodc", local_batch=2, seq_len=16,
+                             total_steps=20, warmup_steps=4, inner_lr=3e-3,
+                             eval_batch=4, seed=0, loop=loop)
+        net = apply_dynamics(scaled_hub_mesh(4, bw_steps=3.0),
+                             "hub_failure:start=5:dur=7", seed=7)
+        tr = CrossRegionTrainer(mcfg, ccfg, tcfg, network=net)
+        tr.run(eval_every=7, log=lambda s: None)
+        return tr
+
+    seg, per = build("segment"), build("per_step")
+    assert seg.engine._resync.measured      # the re-derivation input exists
+    assert [(r["step"], r["nll"]) for r in seg.history] == \
+        [(r["step"], r["nll"]) for r in per.history]
+    ss, sp = seg.engine.stats(), per.engine.stats()
+    for k in ss:
+        assert ss[k] == sp[k], f"stats[{k}]: {ss[k]} vs {sp[k]}"
+    assert (seg.engine.N, seg.engine.h_cocodc) == \
+        (per.engine.N, per.engine.h_cocodc)
+    for x, y in zip(jax.tree.leaves(seg.params_stack),
+                    jax.tree.leaves(per.params_stack)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_validates_routing_meta(tmp_path):
+    """A routed checkpoint refuses to resume into a static-route trainer (the
+    plan schedule derives from the routing config)."""
+    ck = os.path.join(tmp_path, "meta.msgpack")
+    tr = _routed_trainer()
+    tr.run(steps=4, eval_every=8, log=lambda s: None)
+    tr.save_checkpoint(ck)
+    mcfg = dataclasses.replace(TINY, name="routed-ck")
+    ccfg = CoCoDCConfig(num_workers=4, local_steps=8, num_fragments=2,
+                        overlap_depth=2)                   # routing: static
+    tcfg = TrainerConfig(method="cocodc", local_batch=2, seq_len=16,
+                         total_steps=24, warmup_steps=4, inner_lr=3e-3,
+                         eval_batch=4, seed=0)
+    other = CrossRegionTrainer(
+        mcfg, ccfg, tcfg,
+        network=apply_dynamics(scaled_hub_mesh(4, bw_steps=3.0),
+                               "hub_failure:start=6:dur=8", seed=7))
+    with pytest.raises(ValueError, match="routing"):
+        other.restore_checkpoint(ck)
