@@ -1,53 +1,66 @@
 """Paper Figs. 1-2 + Table I analog: validation loss/PPL vs training steps for
 DiLoCo / Streaming DiLoCo / CoCoDC, and steps-to-target-PPL.
 
-Scaled-down setting (CPU container): tiny LLaMA-style model, synthetic non-IID
-corpus; protocol constants keep the paper's RATIOS (K fragments, tau/h overlap
-pressure, gamma, lambda). The claim under test is the ORDERING and the step-count
-reduction, not absolute perplexities.
+Scaled-down setting (CPU container): tiny LLaMA-style model (the registered
+``bench_tiny`` arch), synthetic non-IID corpus; protocol constants keep the
+paper's RATIOS (K fragments, tau/h overlap pressure, gamma, lambda). The claim
+under test is the ORDERING and the step-count reduction, not absolute
+perplexities. Every run is declared as an `ExperimentSpec` and constructed
+through `repro.api.build_experiment` — the same path as the CLI and the sweep.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
+import os
+import sys
+
+if __package__ in (None, ""):              # `python benchmarks/convergence.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import Timer, emit, save_json
 
-from repro.configs import CoCoDCConfig
-from repro.configs.base import ModelConfig
-from repro.core.network import make_scenario
-from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+from repro.api import (ExperimentSpec, MethodExtensions, MethodSpec, ModelRef,
+                       NetworkSpec, RunSpec, build_experiment, resolve_model)
 
-MODEL = ModelConfig(name="bench-lm", family="dense", n_layers=4, d_model=96,
-                    n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
-                    compute_dtype="float32")
+MODEL_ARCH = "bench_tiny"
+# kept for ablations.py (`from benchmarks.convergence import MODEL`)
+MODEL = resolve_model(ExperimentSpec(model=ModelRef(arch=MODEL_ARCH)))
 
 
-def protocol_cfg(method: str, steps: int) -> CoCoDCConfig:
+def base_spec(method: str, steps: int, seed: int = 0,
+              engine_impl: str = "jit", *,
+              extensions: MethodExtensions = MethodExtensions(),
+              network: NetworkSpec = NetworkSpec()) -> ExperimentSpec:
     """Aggressive-overlap regime: tau comparable to the sync interval h, so the
     staleness/inconsistency the paper targets actually bites. The paper (§IV-B)
     notes its own tau=5/H=100 setting is mild and that CoCoDC's advantages are
     'expected to become significantly more pronounced' at larger H and tau —
     this is that regime, scaled to CPU step counts."""
-    return CoCoDCConfig(num_workers=4, local_steps=24, num_fragments=4,
-                        overlap_depth=8, comp_lambda=0.5, net_utilization=0.4,
-                        mixing_alpha=0.5)
+    return ExperimentSpec(
+        name=f"convergence_{method}",
+        model=ModelRef(arch=MODEL_ARCH),
+        method=MethodSpec(name=method, num_workers=4, local_steps=24,
+                          num_fragments=4, overlap_depth=8, comp_lambda=0.5,
+                          net_utilization=0.4, mixing_alpha=0.5,
+                          extensions=extensions),
+        network=network,
+        run=RunSpec(steps=steps, warmup_steps=steps // 10, inner_lr=3e-3,
+                    local_batch=4, seq_len=32, seed=seed, eval_batch=8,
+                    noniid_frac=0.3, eval_every=max(10, steps // 20),
+                    engine_impl=engine_impl))
+
+
+def run_spec(spec: ExperimentSpec) -> dict:
+    tr = build_experiment(spec)
+    with Timer() as t:
+        hist = tr.run(eval_every=spec.run.eval_every, log=lambda s: None)
+    return {"history": hist, "stats": tr.engine.stats(), "host_s": t.dt,
+            "link_stats": tr.engine.link_stats(), "trainer": tr}
 
 
 def run_method(method: str, steps: int, seed: int = 0,
-               engine_impl: str = "jit", ccfg: CoCoDCConfig | None = None,
-               network=None):
-    tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
-                         total_steps=steps, warmup_steps=steps // 10,
-                         inner_lr=3e-3, seed=seed, eval_batch=8,
-                         noniid_frac=0.3, engine_impl=engine_impl)
-    tr = CrossRegionTrainer(MODEL, ccfg or protocol_cfg(method, steps), tcfg,
-                            network=network)
-    with Timer() as t:
-        hist = tr.run(eval_every=max(10, steps // 20), log=lambda s: None)
-    return {"history": hist, "stats": tr.engine.stats(), "host_s": t.dt,
-            "link_stats": tr.engine.link_stats(), "trainer": tr}
+               engine_impl: str = "jit", **spec_kw):
+    return run_spec(base_spec(method, steps, seed, engine_impl, **spec_kw))
 
 
 def link_pricing_compare(steps: int) -> dict:
@@ -60,12 +73,11 @@ def link_pricing_compare(steps: int) -> dict:
     stats for both runs so the busiest-link shift is visible in the JSON."""
     out = {}
     for pricing, key in ((False, "eq12"), (True, "cost_aware")):
-        ccfg = dataclasses.replace(protocol_cfg("cocodc", steps),
-                                   link_pricing=pricing,
-                                   fragment_strategy="skewed")
-        net = make_scenario("transpacific_flaky", num_workers=ccfg.num_workers,
-                            step_time_s=1.0)
-        r = run_method("cocodc", steps, ccfg=ccfg, network=net)
+        r = run_method(
+            "cocodc", steps,
+            extensions=MethodExtensions(link_pricing=pricing,
+                                        fragment_strategy="skewed"),
+            network=NetworkSpec(topology="transpacific_flaky", step_time_s=1.0))
         out[key] = {k: r[k] for k in ("history", "stats", "host_s",
                                       "link_stats")}
         final = r["history"][-1]

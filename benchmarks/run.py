@@ -12,7 +12,10 @@ JSON artifacts under experiments/.
   roofline    — deliverable (g): three-term roofline from the dry-run artifacts
   sweep       — dynamic-WAN scenario x method grid (generated meshes,
                 diurnal/outage dynamics; per-scenario JSON under
-                experiments/sweep/)
+                experiments/sweep/; scenarios are experiments/specs/*.json)
+  spec_smoke  — declarative-path guard: every experiments/specs/*.json
+                round-trips + runs via repro.api.build_experiment, and the
+                CLI flag path maps onto the identical spec
 """
 from __future__ import annotations
 
@@ -34,8 +37,8 @@ def main() -> None:
                     help="comma-separated subset of benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import (ablations, convergence, kernels, roofline, sweep,
-                            wallclock)
+    from benchmarks import (ablations, convergence, kernels, roofline,
+                            spec_smoke, sweep, wallclock)
 
     steps = 240 if args.fast else 480
     ab_steps = 120 if args.fast else 240
@@ -47,6 +50,7 @@ def main() -> None:
         "ablations": lambda: ablations.main(steps=ab_steps),
         "sweep": lambda: _require_zero(
             sweep.main(["--smoke"] if args.fast else []), "sweep"),
+        "spec_smoke": lambda: _require_zero(spec_smoke.main(), "spec_smoke"),
     }
     only = set(args.only.split(",")) if args.only else None
     failed = []

@@ -1,0 +1,125 @@
+"""Spec-driven smoke (CI): prove the declarative path stands on its own.
+
+1. Every spec under ``experiments/specs/*.json`` must load, validate, and
+   round-trip through JSON exactly (spec -> dict -> spec identical, stable
+   spec_hash).
+2. A 2-spec x 2-method grid runs PURELY from the spec files via
+   `repro.api.build_experiment` (steps clamped for CI) — finite eval NLL and
+   non-empty link traffic required.
+3. The CLI flag path must keep mapping onto the identical spec
+   (`spec_from_args(flags) == ExperimentSpec(...)`) so the declarative path
+   and the flag path cannot drift apart.
+
+    PYTHONPATH=src python benchmarks/spec_smoke.py            # exit 1 on drift
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import math
+import os
+import sys
+
+if __package__ in (None, ""):               # `python benchmarks/spec_smoke.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import RESULTS_DIR, Timer, emit
+
+from repro.api import ExperimentSpec, build_experiment
+
+SPECS_DIR = os.path.join(RESULTS_DIR, "specs")
+# (spec file stem, methods, CI step budget)
+SMOKE_GRID = (
+    ("static4_paper", ("streaming", "cocodc"), 8),
+    ("n8_geo_diurnal_hub", ("streaming", "cocodc"), 6),
+)
+
+
+def check_roundtrips() -> "list[str]":
+    failures = []
+    paths = sorted(glob.glob(os.path.join(SPECS_DIR, "*.json")))
+    if not paths:
+        return [f"no spec files under {SPECS_DIR!r}"]
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            spec = ExperimentSpec.from_json_file(path).validate()
+        except (ValueError, KeyError) as e:
+            failures.append(f"{name}: does not load/validate: {e}")
+            continue
+        rt = ExperimentSpec.from_dict(spec.to_dict())
+        if rt != spec:
+            failures.append(f"{name}: spec -> dict -> spec not identical")
+        if ExperimentSpec.from_json(spec.to_json()) != spec:
+            failures.append(f"{name}: JSON round-trip not identical")
+        if rt.spec_hash != spec.spec_hash:
+            failures.append(f"{name}: spec_hash unstable across round-trip")
+        emit(f"spec_smoke/roundtrip/{name}", 0.0, f"hash={spec.spec_hash}")
+    return failures
+
+
+def run_grid() -> "list[str]":
+    # reuse the sweep's re-targeting rule (method swap + cadence derivation +
+    # adaptive_resync compatibility drop) so this guard cannot drift from it
+    from benchmarks.sweep import retarget_spec
+    failures = []
+    for stem, methods, steps in SMOKE_GRID:
+        base = ExperimentSpec.from_json_file(
+            os.path.join(SPECS_DIR, f"{stem}.json"))
+        for method in methods:
+            spec = retarget_spec(base, method, steps)
+            spec = dataclasses.replace(
+                spec, run=dataclasses.replace(spec.run, eval_every=steps))
+            tr = build_experiment(spec)
+            with Timer() as t:
+                hist = tr.run(eval_every=spec.run.eval_every,
+                              log=lambda s: None)
+            nll = hist[-1]["nll"]
+            emit(f"spec_smoke/run/{stem}/{method}", t.dt * 1e6 / steps,
+                 f"final_nll={nll:.4f}")
+            if not math.isfinite(nll):
+                failures.append(f"{stem}/{method}: non-finite eval nll {nll}")
+            if not tr.engine.link_stats()["links"]:
+                failures.append(f"{stem}/{method}: no WAN traffic recorded")
+    return failures
+
+
+def check_flag_parity() -> "list[str]":
+    """The CLI flag path must compose the exact spec the equivalent flags
+    describe — same object, same hash (trainer-level bitwise parity is pinned
+    by tests/test_experiment_spec.py)."""
+    from repro.api import MethodSpec, ModelRef, NetworkSpec, RunSpec
+    from repro.launch.train import make_parser, spec_from_args
+    args = make_parser().parse_args(
+        ["--arch", "bench_tiny", "--method", "streaming", "--workers", "4",
+         "--H", "12", "--fragments", "2", "--tau", "3", "--steps", "24",
+         "--topology", "asym4", "--lr", "0.003", "--seed", "7"])
+    from_flags = spec_from_args(args)
+    expected = ExperimentSpec(
+        model=ModelRef(arch="bench_tiny"),
+        method=MethodSpec(name="streaming", num_workers=4, local_steps=12,
+                          num_fragments=2, overlap_depth=3),
+        network=NetworkSpec(topology="asym4"),
+        run=RunSpec(steps=24, inner_lr=3e-3, seed=7))
+    if from_flags != expected:
+        return [f"flag path drifted from the spec path:\n"
+                f"  flags: {from_flags.to_json(indent=None)}\n"
+                f"  spec : {expected.to_json(indent=None)}"]
+    if from_flags.spec_hash != expected.spec_hash:
+        return ["flag path spec_hash drifted"]
+    emit("spec_smoke/flag_parity", 0.0, f"hash={expected.spec_hash}")
+    return []
+
+
+def main() -> int:
+    failures = check_roundtrips() + check_flag_parity() + run_grid()
+    for f in failures:
+        print(f"SPEC SMOKE FAIL {f}", file=sys.stderr, flush=True)
+    if failures:
+        print(f"{len(failures)} failure(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

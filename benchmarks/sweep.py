@@ -1,12 +1,14 @@
-"""Scenario sweep harness for the dynamic WAN simulator.
+"""Scenario sweep harness for the dynamic WAN simulator — spec-driven.
 
 Runs the four methods (diloco / streaming / cocodc / local) across a grid of
-network scenarios — generated N-region meshes (ring / hub_spoke / continental /
-random_geo) with time-varying link dynamics (diurnal troughs, hub failures,
-flaky crossings, jitter) — and emits one JSON per scenario under
-``experiments/sweep/`` plus a cross-scenario summary. This is the stress rig
-the adaptive transmission strategy (Eq. 11/12) was designed for: static
-topologies never exercise it.
+network scenarios LOADED FROM ``experiments/specs/*.json`` (one declarative
+`ExperimentSpec` per scenario — the same files `repro.launch.train --spec`
+accepts) and emits one JSON per scenario under ``experiments/sweep/`` plus a
+cross-scenario summary. Every trainer is constructed through
+`repro.api.build_experiment`; this harness only swaps the method name and the
+step budget onto each scenario's spec. This is the stress rig the adaptive
+transmission strategy (Eq. 11/12) was designed for: static topologies never
+exercise it.
 
     PYTHONPATH=src python benchmarks/sweep.py                 # full grid
     PYTHONPATH=src python benchmarks/sweep.py --scenario hub_failure8
@@ -22,17 +24,19 @@ routes + hub failover + Eq. 9 re-derivation); ``--smoke`` fails (exit 1) on
 schema drift, non-finite metrics, or a routed hub-failure run whose stall
 fraction is not strictly below its static-route twin's.
 
-Bandwidth scales are AUTO-CALIBRATED from the sweep model's mean fragment
-byte size (`calibrate_bw_scale`, paper_network-style): one fragment
-collective spends ~CALIB_BW_STEPS compute steps in bandwidth, so the toy
-transfers are bandwidth-dominated and the dynamics under test actually bite.
-`Scenario.bw_scale` overrides the calibration when set.
+Bandwidth scales are AUTO-CALIBRATED (`NetworkSpec.bw_scale="auto"` in the
+spec files -> `core.network.calibrate_bw_scale`) from the sweep model's mean
+fragment byte size: one fragment collective spends ~CALIB_BW_STEPS compute
+steps in bandwidth, so the toy transfers are bandwidth-dominated and the
+dynamics under test actually bite. A float in the spec overrides the
+calibration.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import functools
+import glob
 import math
 import os
 import sys
@@ -40,38 +44,26 @@ import sys
 if __package__ in (None, ""):                     # `python benchmarks/sweep.py`
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import Timer, emit, save_json
+from benchmarks.common import RESULTS_DIR, Timer, emit, save_json
 
-from repro.configs import CoCoDCConfig
-from repro.configs.base import ModelConfig
-from repro.core.network import apply_dynamics, generate_mesh, make_scenario
-from repro.core.trainer import CrossRegionTrainer, TrainerConfig
-
-MODEL = ModelConfig(name="sweep-lm", family="dense", n_layers=4, d_model=96,
-                    n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
-                    compute_dtype="float32")
+from repro.api import (ExperimentSpec, MethodSpec, ModelRef, build_experiment,
+                       get_method, mean_fragment_bytes)
+from repro.api import build_network as api_build_network
+from repro.core.network import CALIB_BW_STEPS, apply_dynamics, calibrate_bw_scale
 
 METHODS = ("diloco", "streaming", "cocodc", "local")
 NUM_FRAGMENTS = 4
-# auto-calibration target: bandwidth-seconds of one MEAN-FRAGMENT collective,
-# in compute steps (latency is left untouched, so the calibrated transfers are
-# bandwidth-dominated by construction — asserted in calibrate_bw_scale)
-CALIB_BW_STEPS = 6.0
+SPECS_DIR = os.path.join(RESULTS_DIR, "specs")
+# CALIB_BW_STEPS / calibrate_bw_scale moved to core.network (PR 5) and are
+# re-imported above so existing `from benchmarks.sweep import ...` call sites
+# keep working.
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One network condition: a base topology (generated mesh or named
-    scenario; None = the calibrated symmetric paper network) plus an optional
-    dynamics spec, at a given region count and step budget.
-
-    `bw_scale` shrinks the mesh's real-world bandwidths so one fragment
-    all-reduce costs several compute steps at this benchmark's tiny model
-    scale (the same calibration trick as `paper_network`): without it the
-    transfers are latency-dominated and diurnal troughs/outages would be
-    invisible to the methods under test. ``None`` (the default) derives the
-    scale from the sweep model's actual fragment byte size
-    (`calibrate_bw_scale`); a float overrides the calibration."""
+    """Runtime view of one scenario spec file: the network-identity fields
+    the harness branches on, plus the full `ExperimentSpec` it was loaded
+    from (`spec` — the single source of truth for everything else)."""
     name: str
     n: int = 4
     mesh: str | None = None          # generated-mesh profile
@@ -79,54 +71,47 @@ class Scenario:
     dynamics: str | None = None
     seed: int = 0
     steps: int = 96
-    bw_scale: float | None = None    # None = auto-calibrate
+    bw_scale: float | str | None = "auto"
     routing: str = "static"          # routed communication plans
     hub_failover: bool = False       # re-elect the hub while its links are out
     adaptive_resync: bool = False    # re-derive Eq. 9's N from measured T_s
     note: str = ""
+    spec: ExperimentSpec = dataclasses.field(default_factory=ExperimentSpec)
 
 
-# The grid: static anchor, the three dynamic failure modes the ROADMAP asks
-# for (diurnal trough, hub failure, flaky transpacific), generated meshes at
-# N in {4, 8, 16}, and routed-planner compares (`*_routed` runs the identical
-# network with routing + hub failover + Eq. 9 re-derivation enabled).
-# `n8_geo_diurnal_hub` is the acceptance scenario: an N=8 generated mesh under
-# diurnal bandwidth AND a hub failure.
-SCENARIOS = [
-    Scenario("static4_paper", steps=96,
-             note="static calibrated symmetric network — regression anchor"),
-    Scenario("diurnal_trough4", topology="asym4", steps=96,
-             dynamics="diurnal:period=96:depth=0.7",
-             note="asym 4-region mesh through a deep synchronized trough"),
-    Scenario("transpacific_flaky_dyn4", topology="transpacific_flaky",
-             steps=96,
-             dynamics="flaky:n=4:dur=6:factor=0.15,jitter:frac=0.05",
-             note="degraded crossing + random flaky windows + jitter"),
-    Scenario("hub_failure8", n=8, mesh="hub_spoke", steps=64,
-             dynamics="hub_failure:start=24:dur=16",
-             note="hierarchical mesh loses its hub mid-run (full outage)"),
-    Scenario("hub_failure8_routed", n=8, mesh="hub_spoke", steps=64,
-             dynamics="hub_failure:start=24:dur=16",
-             routing="routed", hub_failover=True, adaptive_resync=True,
-             note="hub_failure8 on the routed planner: the collective "
-                  "re-forms around a deterministically elected stand-in hub"),
-    Scenario("n8_geo_diurnal_hub", n=8, mesh="random_geo", steps=64,
-             dynamics="diurnal:period=64:depth=0.6,"
-                      "hub_failure:start=20:dur=12:factor=0.1",
-             note="ACCEPTANCE: N=8 generated mesh, diurnal + hub failure"),
-    Scenario("n8_geo_diurnal_hub_routed", n=8, mesh="random_geo", steps=64,
-             dynamics="diurnal:period=64:depth=0.6,"
-                      "hub_failure:start=20:dur=12:factor=0.1",
-             routing="routed", hub_failover=True, adaptive_resync=True,
-             note="acceptance compare: routed multi-hop planner on the same "
-                  "N=8 geo mesh"),
-    Scenario("continental8_jitter", n=8, mesh="continental", steps=64,
-             dynamics="jitter:frac=0.1",
-             note="clustered continents with per-transfer jitter"),
-    Scenario("ring16_diurnal", n=16, mesh="ring", steps=48,
-             dynamics="diurnal:period=48:depth=0.5",
-             note="wide 16-region ring under staggered timezones"),
-]
+def load_scenarios(specs_dir: str = SPECS_DIR) -> "list[Scenario]":
+    """One Scenario per ``experiments/specs/*.json`` — the grid is data."""
+    scenarios = []
+    for path in sorted(glob.glob(os.path.join(specs_dir, "*.json"))):
+        spec = ExperimentSpec.from_json_file(path).validate()
+        scenarios.append(Scenario(
+            name=spec.name or os.path.splitext(os.path.basename(path))[0],
+            n=spec.method.num_workers, mesh=spec.network.mesh,
+            topology=spec.network.topology, dynamics=spec.network.dynamics,
+            seed=spec.network.mesh_seed, steps=spec.run.steps,
+            bw_scale=spec.network.bw_scale, routing=spec.network.routing,
+            hub_failover=spec.network.hub_failover,
+            adaptive_resync=spec.method.extensions.adaptive_resync,
+            note=spec.note, spec=spec))
+    if not scenarios:
+        raise FileNotFoundError(
+            f"no scenario specs under {specs_dir!r} — the sweep grid is "
+            f"driven by experiments/specs/*.json")
+    return scenarios
+
+
+@functools.lru_cache(maxsize=1)
+def _grid_scenarios() -> "tuple[Scenario, ...]":
+    return tuple(load_scenarios())
+
+
+def __getattr__(name: str):
+    # `SCENARIOS` is loaded lazily (PEP 562) so importing this module — e.g.
+    # from benchmarks/run.py for an unrelated benchmark — never does disk
+    # I/O or fails on a checkout without experiments/specs/.
+    if name == "SCENARIOS":
+        return list(_grid_scenarios())
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 SMOKE_METHODS = ("streaming", "cocodc")
 # smoke grid: (scenario name, methods, steps). The hub-failure pair runs long
@@ -160,81 +145,57 @@ STATS_KEYS = ("wall_clock_s", "comm_seconds", "bytes_sent", "n_syncs",
 def fragment_wire_bytes() -> int:
     """Mean fragment payload of the sweep model (f32 wire format), from the
     real fragmenter — the calibration input."""
-    import jax
-
-    from repro.core.fragments import make_fragmenter
-    from repro.models import api
-
-    shape = jax.eval_shape(functools.partial(api.init_params, MODEL),
-                           jax.random.PRNGKey(0))
-    frag = make_fragmenter(MODEL, shape, NUM_FRAGMENTS)
-    return frag.total_bytes // NUM_FRAGMENTS
+    return mean_fragment_bytes(ExperimentSpec(
+        model=ModelRef(arch="bench_tiny"),
+        method=MethodSpec(num_fragments=NUM_FRAGMENTS)))
 
 
-def calibrate_bw_scale(net, frag_bytes: int, *,
-                       target_steps: float = CALIB_BW_STEPS) -> float:
-    """paper_network-style auto-calibration: the bandwidth multiplier that
-    makes one mean-fragment collective spend `target_steps * T_c` seconds in
-    its BANDWIDTH phase on this topology. The bandwidth phase is measured on
-    a latency-free copy (on a heterogeneous mesh the collective's bottleneck
-    link CHANGES with the scale, so subtracting the latency phases from the
-    full cost would calibrate against the wrong link). Latencies are
-    untouched, so the calibrated transfer is bandwidth-dominated — asserted,
-    because a latency-dominated transfer would hide the dynamics under
-    test."""
-    import numpy as np
-    lat_free = dataclasses.replace(net,
-                                   latency_s=np.zeros_like(net.latency_s))
-    bw_seconds = lat_free.allreduce_time(frag_bytes)
-    if bw_seconds <= 0.0:
-        raise AssertionError(
-            f"calibration: topology has no bandwidth cost "
-            f"({net.num_workers} regions)")
-    target = target_steps * net.step_time_s
-    lat = net.allreduce_time(0)
-    assert target > lat, (
-        f"calibrated transfer would be latency-dominated: bandwidth target "
-        f"{target:.3f}s <= latency phases {lat:.3f}s")
-    return bw_seconds / target
-
-
-def build_network(sc: Scenario, step_time_s: float = 1.0):
-    """None = let the trainer build the calibrated symmetric paper network."""
-    if sc.mesh is not None:
-        net = generate_mesh(sc.n, sc.mesh, seed=sc.seed,
-                            step_time_s=step_time_s)
-    elif sc.topology is not None:
-        net = make_scenario(sc.topology, num_workers=sc.n,
-                            step_time_s=step_time_s)
-    else:
+def build_network(sc: Scenario, step_time_s: "float | None" = None):
+    """None = let the trainer build the calibrated symmetric paper network.
+    Delegates assembly (mesh/scenario + bw_scale calibration) to the API
+    factory. The Scenario VIEW fields are authoritative here, so a
+    `dataclasses.replace(sc, bw_scale=..., mesh=...)` override is honored
+    consistently (the calibration tests rely on this); `run_one` reads
+    `sc.spec` directly and never consults the view. `step_time_s=None`
+    keeps the spec's own T_c, so this path builds the same topology the
+    sweep actually runs on."""
+    net_spec = dataclasses.replace(sc.spec.network, mesh=sc.mesh,
+                                   topology=sc.topology, mesh_seed=sc.seed,
+                                   bw_scale=sc.bw_scale)
+    if step_time_s is not None:
+        net_spec = dataclasses.replace(net_spec, step_time_s=step_time_s)
+    method = dataclasses.replace(sc.spec.method, num_workers=sc.n)
+    net = api_build_network(dataclasses.replace(sc.spec, network=net_spec,
+                                                method=method))
+    if net is None:
         return None
-    scale = sc.bw_scale
-    if scale is None:
-        scale = calibrate_bw_scale(net, fragment_wire_bytes())
-    if scale != 1.0:
-        net = dataclasses.replace(net,
-                                  bandwidth_Bps=net.bandwidth_Bps * scale)
     return apply_dynamics(net, sc.dynamics, seed=sc.seed)
 
 
+def retarget_spec(spec: ExperimentSpec, method: str,
+                  steps: int) -> ExperimentSpec:
+    """A scenario spec re-targeted at `method` over `steps`: the harness
+    derives warmup/eval cadence from the (possibly overridden) step budget,
+    and drops adaptive_resync for methods with a fixed cadence (the routed
+    scenario files declare it for cocodc). Shared with spec_smoke so the CI
+    guard cannot drift from the sweep's re-targeting rule."""
+    ext = dataclasses.replace(
+        spec.method.extensions,
+        adaptive_resync=(spec.method.extensions.adaptive_resync and
+                         get_method(method).supports_adaptive_resync))
+    return dataclasses.replace(
+        spec,
+        method=dataclasses.replace(spec.method, name=method, extensions=ext),
+        run=dataclasses.replace(spec.run, steps=steps,
+                                warmup_steps=max(2, steps // 10),
+                                eval_every=max(4, steps // 6)))
+
+
 def run_one(sc: Scenario, method: str, steps: int) -> dict:
-    ccfg = CoCoDCConfig(num_workers=sc.n, local_steps=24,
-                        num_fragments=NUM_FRAGMENTS,
-                        overlap_depth=8, comp_lambda=0.5, net_utilization=0.4,
-                        mixing_alpha=0.5, routing=sc.routing,
-                        hub_failover=sc.hub_failover,
-                        adaptive_resync=sc.adaptive_resync)
-    tcfg = TrainerConfig(method=method, local_batch=4, seq_len=32,
-                         total_steps=steps, warmup_steps=max(2, steps // 10),
-                         inner_lr=3e-3, seed=sc.seed, eval_batch=8,
-                         noniid_frac=0.3)
-    net = build_network(sc)
-    # dynamics on the default paper network go through the trainer hook
-    dynamics = sc.dynamics if net is None else None
-    tr = CrossRegionTrainer(MODEL, ccfg, tcfg, network=net,
-                            dynamics=dynamics, dynamics_seed=sc.seed)
+    spec = retarget_spec(sc.spec, method, steps)
+    tr = build_experiment(spec)
     with Timer() as t:
-        hist = tr.run(eval_every=max(4, steps // 6), log=lambda s: None)
+        hist = tr.run(eval_every=spec.run.eval_every, log=lambda s: None)
     final = hist[-1]
     return {"final_ppl": float(final["ppl"]), "final_nll": float(final["nll"]),
             "steps_to_target": None,     # filled once the target is known
@@ -339,10 +300,11 @@ def compare_routed(payloads: dict) -> "list[str]":
 
 
 def main(argv=None) -> int:
+    scenarios = _grid_scenarios()
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default=None,
-                    choices=[s.name for s in SCENARIOS],
-                    help="run a single scenario from the grid")
+                    choices=[s.name for s in scenarios],
+                    help="run a single scenario from the spec grid")
     ap.add_argument("--steps", type=int, default=None,
                     help="override the per-scenario step budget")
     ap.add_argument("--smoke", action="store_true",
@@ -352,7 +314,7 @@ def main(argv=None) -> int:
                          "stall fraction")
     args = ap.parse_args(argv)
 
-    by_name = {s.name: s for s in SCENARIOS}
+    by_name = {s.name: s for s in scenarios}
     if args.smoke:
         # --steps may shorten the quick scenarios but never the routed-vs-
         # static pair below its grid budget: cutting the run before the
@@ -364,7 +326,7 @@ def main(argv=None) -> int:
                 for name, methods, steps in SMOKE_GRID]
     else:
         names = [args.scenario] if args.scenario else [s.name
-                                                       for s in SCENARIOS]
+                                                       for s in scenarios]
         grid = [(by_name[n], METHODS, args.steps) for n in names]
 
     summary = {}

@@ -14,6 +14,10 @@ shape (needs a real accelerator for speed), or a heterogeneous WAN scenario:
     PYTHONPATH=src python examples/train_cross_region.py --mesh random_geo \
         --workers 8 --dynamics 'diurnal:depth=0.6,hub_failure:start=80:dur=40' \
         --steps 200          # generated 8-region mesh on time-varying links
+
+Runs are defined by a declarative ExperimentSpec (repro.api) and built through
+`build_experiment`; pass --print-spec to see the spec this example's flags map
+onto, and replay it later with `repro.launch.train --spec <file>`.
 """
 import argparse
 import sys
@@ -53,6 +57,8 @@ def main():
                     help="re-derive Eq. 9's N per round from measured T_s")
     ap.add_argument("--resume", default=None,
                     help="trainer_state_v1 checkpoint to continue from")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the composed ExperimentSpec JSON and exit")
     ap.add_argument("--full-model", action="store_true")
     args = ap.parse_args()
     net_tag = args.mesh and f"{args.mesh}{args.workers}" or args.topology
@@ -86,6 +92,8 @@ def main():
         argv.append("--hub-failover")
     if args.adaptive_resync:
         argv.append("--adaptive-resync")
+    if args.print_spec:
+        argv.append("--print-spec")
     if not args.full_model:
         argv.append("--reduced")
         argv.extend(["--lr", "3e-3"])

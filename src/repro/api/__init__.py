@@ -1,0 +1,29 @@
+"""Public experiment API: declarative specs + the pluggable sync-method
+registry + the one trainer factory.
+
+    from repro.api import ExperimentSpec, MethodSpec, build_experiment
+
+    spec = ExperimentSpec(method=MethodSpec(name="cocodc", local_steps=100))
+    trainer = build_experiment(spec)
+    trainer.run(eval_every=spec.run.eval_every)
+
+Specs serialize to JSON (`spec.to_json()` / `ExperimentSpec.from_json_file`),
+validate cross-field constraints (`spec.validate()`), and carry a stable
+`spec_hash` used for checkpoint-resume validation. New sync methods register
+with `@register_method` (see repro/core/methods.py) and are then selectable
+by name in any spec or CLI flag.
+"""
+from repro.api.build import (build_experiment, build_network,
+                             mean_fragment_bytes, resolve_model)
+from repro.api.spec import (ExperimentSpec, MethodExtensions, MethodSpec,
+                            ModelRef, NetworkSpec, RunSpec, diff_specs)
+from repro.core.methods import (SyncMethod, get_method, register_method,
+                                registered_methods, unregister_method)
+
+__all__ = [
+    "ExperimentSpec", "MethodSpec", "MethodExtensions", "ModelRef",
+    "NetworkSpec", "RunSpec", "build_experiment", "build_network",
+    "mean_fragment_bytes", "resolve_model", "diff_specs",
+    "SyncMethod", "register_method", "unregister_method", "get_method",
+    "registered_methods",
+]

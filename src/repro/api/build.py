@@ -1,0 +1,94 @@
+"""`build_experiment(spec) -> CrossRegionTrainer` — the single factory behind
+every launcher (repro.launch.train, benchmarks/sweep.py,
+benchmarks/convergence.py, examples/train_cross_region.py).
+
+All network/mesh/dynamics assembly that used to be re-implemented per caller
+lives here once: named scenario or generated mesh, optional bandwidth
+calibration (`NetworkSpec.bw_scale="auto"`), and the dynamics layer (attached
+by the trainer so it applies to the calibrated symmetric default too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+from repro.api.spec import ExperimentSpec
+from repro.core.network import (Topology, calibrate_bw_scale, generate_mesh,
+                                make_scenario)
+
+
+def resolve_model(spec: ExperimentSpec):
+    """ModelRef -> ModelConfig (reduced variant / dtype override applied)."""
+    from repro.configs import get_config
+    mcfg = get_config(spec.model.arch)
+    if spec.model.reduced:
+        mcfg = mcfg.reduced()
+    if spec.model.compute_dtype is not None:
+        mcfg = dataclasses.replace(mcfg, compute_dtype=spec.model.compute_dtype)
+    return mcfg
+
+
+@functools.lru_cache(maxsize=None)
+def _mean_fragment_bytes_cached(arch: str, reduced: bool,
+                                compute_dtype: Optional[str],
+                                num_fragments: int) -> int:
+    import jax
+
+    from repro.core.fragments import make_fragmenter
+    from repro.models import api as models_api
+    mcfg = resolve_model(ExperimentSpec.from_dict(
+        {"model": {"arch": arch, "reduced": reduced,
+                   "compute_dtype": compute_dtype}}))
+    shape = jax.eval_shape(functools.partial(models_api.init_params, mcfg),
+                           jax.random.PRNGKey(0))
+    frag = make_fragmenter(mcfg, shape, num_fragments)
+    return frag.total_bytes // num_fragments
+
+
+def mean_fragment_bytes(spec: ExperimentSpec) -> int:
+    """Mean fragment payload (f32 wire format) of the spec's model under its
+    fragment count — the `bw_scale="auto"` calibration input. Abstract shapes
+    only (eval_shape); never allocates the model."""
+    return _mean_fragment_bytes_cached(
+        spec.model.arch, spec.model.reduced, spec.model.compute_dtype,
+        spec.method.num_fragments)
+
+
+def build_network(spec: ExperimentSpec) -> Optional[Topology]:
+    """NetworkSpec -> base Topology (no dynamics attached — the trainer owns
+    that so dynamics also apply to the default network). None = let the
+    trainer build the calibrated symmetric paper network."""
+    n = spec.network
+    if n.mesh is not None:
+        net = generate_mesh(spec.method.num_workers, n.mesh, seed=n.mesh_seed,
+                            step_time_s=n.step_time_s)
+    elif n.topology not in (None, "paper"):
+        net = make_scenario(n.topology, num_workers=spec.method.num_workers,
+                            step_time_s=n.step_time_s)
+    else:
+        # "paper"/None keeps the calibrated-symmetric default (network=None)
+        # so the fragment-size calibration in CrossRegionTrainer applies
+        return None
+    scale = n.bw_scale
+    if scale == "auto":
+        scale = calibrate_bw_scale(net, mean_fragment_bytes(spec))
+    if scale is not None and float(scale) != 1.0:
+        net = dataclasses.replace(net,
+                                  bandwidth_Bps=net.bandwidth_Bps * float(scale))
+    return net
+
+
+def build_experiment(spec: ExperimentSpec):
+    """Validate `spec` and construct the trainer it describes. The spec rides
+    on the trainer into every checkpoint (`meta["spec"]`/`meta["spec_hash"]`)
+    so a resume validates against the run's full declarative identity."""
+    from repro.core.trainer import CrossRegionTrainer
+    spec.validate()
+    mcfg = resolve_model(spec)
+    ccfg = spec.method.to_cocodc(spec.network)
+    tcfg = spec.run.to_trainer_config(spec.method.name)
+    return CrossRegionTrainer(
+        mcfg, ccfg, tcfg, network=build_network(spec),
+        dynamics=spec.network.dynamics, dynamics_seed=spec.network.mesh_seed,
+        spec=spec)

@@ -18,6 +18,7 @@ ARCH_IDS = [
     "command_r_35b",
     "recurrentgemma_9b",
     "paper_150m",
+    "bench_tiny",
 ]
 
 _ALIAS = {a.replace("_", "-"): a for a in ARCH_IDS}

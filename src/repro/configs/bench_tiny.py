@@ -1,0 +1,10 @@
+"""Tiny dense LM shared by the benchmark harnesses (convergence, sweep) and
+the spec-driven smoke grid. Registered so `ModelRef(arch="bench_tiny")`
+resolves through the ordinary config registry instead of an inline
+ModelConfig duplicated per benchmark. CPU-tractable: ~4 layers x 96 dims."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(name="bench_tiny", family="dense", n_layers=4, d_model=96,
+                     n_heads=4, n_kv_heads=2, d_ff=256, vocab=512,
+                     compute_dtype="float32",
+                     source="synthetic benchmark model (no external card)")

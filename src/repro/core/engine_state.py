@@ -33,9 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CoCoDCConfig
-from repro.core import delay_comp as dc_lib
 from repro.core import outer_opt
 from repro.core.fragments import Fragmenter
+from repro.core.methods import get_method
 
 
 def _is_none(x):
@@ -127,7 +127,7 @@ def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
     """Build the initial state from the (identical-per-worker) params stack."""
     K, M, H = ccfg.num_fragments, ccfg.num_workers, ccfg.local_steps
     theta_g = jax.tree.map(lambda a: a[0], params_stack)
-    overlapped = method in ("streaming", "cocodc")
+    impl = get_method(method)
     return EngineState(
         theta_g=theta_g,
         momentum=jax.tree.map(jnp.zeros_like, theta_g),
@@ -135,9 +135,9 @@ def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
         # otherwise carry a dead full-model f32 buffer through every round
         inflight_delta=(jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
-            if overlapped else None),
+            if impl.overlapped else None),
         inflight_snapshot=(jax.tree.map(jnp.zeros_like, params_stack)
-                           if method == "cocodc" else None),
+                           if impl.keeps_snapshot else None),
         inflight_active=jnp.zeros((K,), bool),
         inflight_t_init=jnp.zeros((K,), jnp.int32),
         delta_norm=jnp.zeros((K,), jnp.float32),
@@ -181,8 +181,12 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
                     dc_impl: str = "ref", use_jit: bool = True) -> EngineFns:
     """Build the transition functions. `use_jit=False` executes the identical
     pure functions eagerly (the legacy host-side path — kept for golden-
-    trajectory parity tests and debugging)."""
+    trajectory parity tests and debugging). The method-specific pieces (does
+    this method snapshot local state at initiation? how is a delivered global
+    fragment folded back into worker-local state?) come from the registered
+    `SyncMethod` strategy, not from name branches."""
     M = ccfg.num_workers
+    impl = get_method(method)
 
     def _mask_offline(new_local, old_local, avail):
         return jax.tree.map(
@@ -200,7 +204,7 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
             frag_stack, theta_g_frag, state.worker_available,
             sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
         snapshot = state.inflight_snapshot
-        if method == "cocodc":
+        if impl.keeps_snapshot:
             snapshot = frag.insert(snapshot, p, frag_stack, worker_axis=True)
         return dataclasses.replace(
             state,
@@ -213,8 +217,9 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
 
     def deliver(state: EngineState, t, params_stack, p: int):
         """Fragment p's all-reduce completed at step t: outer Nesterov update
-        of the global fragment, then Streaming-DiLoCo blending (Eq. 3) or
-        CoCoDC delay compensation (Algorithm 1), then the Eq. 11 rate update."""
+        of the global fragment, then the strategy's delivery application
+        (Eq. 3 blending, Algorithm-1 delay compensation, ...), then the
+        Eq. 11 rate update."""
         delta_avg = frag.extract(state.inflight_delta, p)
         theta_g_frag = frag.extract(state.theta_g, p)
         mom_frag = frag.extract(state.momentum, p)
@@ -225,15 +230,11 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
         local_now = frag.extract(params_stack, p, worker_axis=True)
         g_b = jax.tree.map(lambda g: None if g is None else g[None], new_g,
                            is_leaf=_is_none)
-        if method == "streaming":
-            new_local = dc_lib.blend(local_now, g_b, alpha=ccfg.mixing_alpha)
-        else:  # cocodc — Algorithm 1 with the ACTUAL overlap depth
-            snap = frag.extract(state.inflight_snapshot, p, worker_axis=True)
-            tau_actual = jnp.maximum(
-                1, t - state.inflight_t_init[p]).astype(jnp.float32)
-            new_local = dc_lib.compensate(
-                local_now, snap, g_b, tau=tau_actual, lam=ccfg.comp_lambda,
-                H=float(ccfg.local_steps), sign=ccfg.eq4_sign, impl=dc_impl)
+        snap = (frag.extract(state.inflight_snapshot, p, worker_axis=True)
+                if impl.keeps_snapshot else None)
+        new_local = impl.apply_delivery(
+            ccfg, dc_impl, local_now=local_now, snapshot=snap, g_b=g_b,
+            t=t, t_init=state.inflight_t_init[p])
         # offline workers keep their local state (they re-sync on return)
         new_local = _mask_offline(new_local, local_now, state.worker_available)
 

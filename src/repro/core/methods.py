@@ -1,0 +1,238 @@
+"""Pluggable sync-method strategy registry (the DiLoCo family).
+
+Every cross-region synchronization method — DiLoCo, Streaming DiLoCo, CoCoDC,
+plain local SGD — is one registered `SyncMethod` strategy object instead of an
+``if method == ...`` branch scattered through `core/protocol.py` and
+`core/engine_state.py`. A strategy exposes exactly the event hooks the engine
+dispatches on:
+
+  host side (scheduling — the strategy drives a `ProtocolEngine`):
+    * `next_event_step(eng, t)`   — initiation cadence: the next step with a
+      protocol action (None = the host loop may fuse every remaining step)
+    * `on_step_end(eng, t, ...)`  — the per-step protocol action itself
+      (blocking round, delivery processing, fragment initiation)
+
+  device side (pure, traced under jit by `engine_state.make_engine_fns`):
+    * `apply_delivery(...)`       — round blending: how a delivered global
+      fragment is folded back into worker-local state (Eq. 3 blending,
+      Algorithm-1 delay compensation, ...)
+
+  state shape flags:
+    * `overlapped`      — parks fragment payloads in the in-flight buffers
+    * `keeps_snapshot`  — records initiation-time local state (Algorithm 1)
+    * `supports_adaptive_resync` — Eq. 9/10 re-derivation applies
+
+New methods in the family (e.g. a CO2-style full-overlap local SGD,
+arXiv:2401.16265) register with `@register_method` and become selectable by
+name everywhere a method string is accepted (`ExperimentSpec`, CLI flags,
+`ProtocolEngine`) — no core edits. The four built-ins reproduce the previous
+hard-coded branches BITWISE (pinned by tests/test_engine_state.py and
+tests/test_trainer_segments.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import adaptive as adaptive_lib
+from repro.core import delay_comp as dc_lib
+
+_REGISTRY: Dict[str, "SyncMethod"] = {}
+
+
+def register_method(cls: type) -> type:
+    """Class decorator: instantiate `cls` and register it under `cls().name`.
+    Re-registering a name replaces the previous strategy (latest wins), so a
+    downstream experiment can override a built-in."""
+    inst = cls()
+    if not getattr(inst, "name", ""):
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def unregister_method(name: str) -> None:
+    """Remove a registered strategy (primarily for test cleanup)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_methods() -> Tuple[str, ...]:
+    """Sorted names of every registered sync method."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_method(name: str) -> "SyncMethod":
+    """Registry lookup; unknown names raise listing what IS registered."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sync method {name!r}; registered methods: "
+            f"{', '.join(registered_methods())} "
+            f"(add one with @repro.core.methods.register_method)") from None
+
+
+class SyncMethod:
+    """Base strategy: local-SGD semantics (no cross-region traffic). Subclass
+    and override the hooks; the `eng` argument of the host hooks is the
+    `ProtocolEngine` driving the run (its `_initiate`/`_process_deliveries`/
+    `_schedule_transfer` helpers are the supported extension surface)."""
+
+    name: str = ""
+    overlapped: bool = False
+    keeps_snapshot: bool = False
+    supports_adaptive_resync: bool = False
+
+    # ------------------------------------------------------------ host hooks
+
+    def next_event_step(self, eng, t: int) -> Optional[int]:
+        """Smallest step t' >= t with a protocol action; None = never."""
+        return None
+
+    def on_step_end(self, eng, t: int, params_stack):
+        """Protocol action after inner step t (wall-clock already ticked by
+        the engine). Returns the possibly-updated params_stack."""
+        return params_stack
+
+    # ---------------------------------------------------------- device hook
+
+    def apply_delivery(self, ccfg, dc_impl, *, local_now, snapshot, g_b,
+                       t, t_init):
+        """Fold a delivered global fragment `g_b` (broadcast over the worker
+        axis) into the workers' current local fragment `local_now`. Pure —
+        traced under jit by `engine_state.make_engine_fns`."""
+        raise NotImplementedError(
+            f"method {self.name!r} parks no fragments in flight")
+
+
+@register_method
+class LocalSGD(SyncMethod):
+    """No synchronization at all — the isolated-datacenter baseline."""
+    name = "local"
+
+
+@register_method
+class DiLoCo(SyncMethod):
+    """Blocking DiLoCo: full-model all-reduce + outer update every H steps;
+    all workers restart from the new consensus (wall-clock pays the WAN)."""
+    name = "diloco"
+
+    def next_event_step(self, eng, t: int) -> int:
+        return t + (eng.H - 1 - t) % eng.H
+
+    def on_step_end(self, eng, t: int, params_stack):
+        if (t + 1) % eng.H == 0:
+            finish, _ = eng._schedule_transfer(eng.frag.total_bytes)
+            eng.wall_clock = max(eng.wall_clock, finish)   # BLOCKING
+            eng.state, params_stack = eng._fns.diloco_round(
+                eng.state, params_stack)
+        return params_stack
+
+
+class OverlappedMethod(SyncMethod):
+    """Shared machinery for methods that overlap fragment all-reduces with
+    computation: plan refresh, due-delivery processing, then the method's own
+    initiation rule. Subclasses define `sync_interval` + `initiate_due` (and
+    optionally `extra_event_step`/`after_deliveries`)."""
+    overlapped = True
+
+    def sync_interval(self, eng) -> int:
+        raise NotImplementedError
+
+    def extra_event_step(self, eng, t: int) -> Optional[int]:
+        """An additional host-side event boundary (e.g. the outer-round edge
+        where Eq. 9 re-derivation runs); None = none."""
+        return None
+
+    def initiate_due(self, eng, t: int, params_stack) -> None:
+        raise NotImplementedError
+
+    def after_deliveries(self, eng, t: int) -> None:
+        pass
+
+    def next_event_step(self, eng, t: int) -> int:
+        h = self.sync_interval(eng)
+        nxt = t if t % h == 0 else t + h - t % h
+        extra = self.extra_event_step(eng, t)
+        if extra is not None:
+            nxt = min(nxt, extra)
+        for ev in eng.pending:
+            nxt = min(nxt, max(t, ev.deliver_at))
+        return nxt
+
+    def on_step_end(self, eng, t: int, params_stack):
+        if eng._planner is not None:
+            # roll the plan state to the CURRENT wall-clock before any device
+            # decision this step (a queued future transfer may have pulled
+            # the cached plan ahead of simulated time — availability and
+            # pricing must reflect now, not the future)
+            eng._active_plan(eng.wall_clock)
+        params_stack = eng._process_deliveries(t, params_stack)
+        self.initiate_due(eng, t, params_stack)
+        self.after_deliveries(eng, t)
+        return params_stack
+
+
+@register_method
+class StreamingDiLoCo(OverlappedMethod):
+    """Streaming DiLoCo: fixed round-robin fragment schedule (one fragment
+    every H/K steps), Eq. 3 blending on delivery."""
+    name = "streaming"
+
+    def sync_interval(self, eng) -> int:
+        return eng.h_stream
+
+    def initiate_due(self, eng, t: int, params_stack) -> None:
+        if t % eng.h_stream == 0:
+            p = (t // eng.h_stream) % eng.K
+            if all(ev.frag != p for ev in eng.pending):
+                eng._initiate(t, params_stack, p)
+
+    def apply_delivery(self, ccfg, dc_impl, *, local_now, snapshot, g_b,
+                       t, t_init):
+        return dc_lib.blend(local_now, g_b, alpha=ccfg.mixing_alpha)
+
+
+@register_method
+class CoCoDC(OverlappedMethod):
+    """CoCoDC: Eq. 9/10 initiation cadence, Algorithm-2 fragment selection,
+    Algorithm-1 delay compensation on delivery (with the ACTUAL overlap
+    depth), optional per-round Eq. 9 re-derivation from measured T_s."""
+    name = "cocodc"
+    keeps_snapshot = True
+    supports_adaptive_resync = True
+
+    def sync_interval(self, eng) -> int:
+        return eng.h_cocodc
+
+    def extra_event_step(self, eng, t: int) -> Optional[int]:
+        if eng._resync is not None:
+            # Eq. 9 re-derivation runs in on_step_end at each outer-round
+            # boundary — that step must be a protocol event, or the segment
+            # loop would fuse it away and diverge from the per-step loop
+            return t + (eng.H - 1 - t) % eng.H
+        return None
+
+    def initiate_due(self, eng, t: int, params_stack) -> None:
+        if t % eng.h_cocodc == 0:
+            busy = {ev.frag for ev in eng.pending}
+            if len(busy) < eng.K:
+                p = eng._select_cocodc(t, busy)
+                eng._initiate(t, params_stack, p)
+
+    def after_deliveries(self, eng, t: int) -> None:
+        if eng._resync is not None and (t + 1) % eng.H == 0:
+            # end of an outer round: re-derive Eq. 9's N / Eq. 10's h from
+            # the measured T_s so next round's cadence tracks the network
+            # the run actually sees
+            eng.N, eng.h_cocodc = adaptive_lib.rederive_schedule(
+                eng._resync, eng.K, eng.H, eng.topology.t_c,
+                eng.cfg.net_utilization, eng._t_s_startup)
+
+    def apply_delivery(self, ccfg, dc_impl, *, local_now, snapshot, g_b,
+                       t, t_init):
+        tau_actual = jnp.maximum(1, t - t_init).astype(jnp.float32)
+        return dc_lib.compensate(
+            local_now, snapshot, g_b, tau=tau_actual, lam=ccfg.comp_lambda,
+            H=float(ccfg.local_steps), sign=ccfg.eq4_sign, impl=dc_impl)

@@ -1235,3 +1235,36 @@ def apply_dynamics(topo: Topology, spec: "str | LinkDynamics | None", *,
     if isinstance(spec, LinkDynamics):
         return topo.with_dynamics(spec)
     return topo.with_dynamics(parse_dynamics(spec, topo, seed=seed))
+
+
+# auto-calibration target: bandwidth-seconds of one mean-fragment collective,
+# in compute steps (latency is left untouched, so the calibrated transfers
+# are bandwidth-dominated by construction — asserted in calibrate_bw_scale)
+CALIB_BW_STEPS = 6.0
+
+
+def calibrate_bw_scale(net: Topology, frag_bytes: int, *,
+                       target_steps: float = CALIB_BW_STEPS) -> float:
+    """paper_network-style auto-calibration: the bandwidth multiplier that
+    makes one `frag_bytes` collective spend `target_steps * T_c` seconds in
+    its BANDWIDTH phase on this topology. The bandwidth phase is measured on
+    a latency-free copy (on a heterogeneous mesh the collective's bottleneck
+    link CHANGES with the scale, so subtracting the latency phases from the
+    full cost would calibrate against the wrong link). Latencies are
+    untouched, so the calibrated transfer is bandwidth-dominated — asserted,
+    because a latency-dominated transfer would hide any link dynamics under
+    test. Used by spec-driven experiments (`NetworkSpec.bw_scale="auto"`)
+    and the scenario sweep."""
+    lat_free = dataclasses.replace(net,
+                                   latency_s=np.zeros_like(net.latency_s))
+    bw_seconds = lat_free.allreduce_time(frag_bytes)
+    if bw_seconds <= 0.0:
+        raise AssertionError(
+            f"calibration: topology has no bandwidth cost "
+            f"({net.num_workers} regions)")
+    target = target_steps * net.step_time_s
+    lat = net.allreduce_time(0)
+    assert target > lat, (
+        f"calibrated transfer would be latency-dominated: bandwidth target "
+        f"{target:.3f}s <= latency phases {lat:.3f}s")
+    return bw_seconds / target

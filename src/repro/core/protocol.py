@@ -65,7 +65,49 @@ from repro.configs.base import CoCoDCConfig
 from repro.core import adaptive as adaptive_lib
 from repro.core import engine_state as es
 from repro.core.fragments import Fragmenter
+from repro.core.methods import get_method
 from repro.core.network import CommPlan, RoutePlanner, Topology, as_topology
+
+# Host-scheduler checkpoint schema. One upgrade path
+# (`upgrade_scheduler_state`) replaces the `.get(...)`-default sprawl that
+# accumulated as PRs added fields:
+#   v1 (PR 2) — pending/seq/channel clocks/traffic matrices only
+#   v2 (PR 3) — + dynamics clocks (dyn_seq, stall_seconds, n_retries)
+#   v3 (PR 4) — + routing/resync blocks, 6-element pending rows (duration)
+#   v4 (PR 5) — + explicit schema_version stamp
+SCHEDULER_SCHEMA_VERSION = 4
+
+_ROUTING_DEFAULTS = {"plan_time": -1.0, "counted_time": -1.0, "plan_dark": [],
+                     "reroutes": 0, "hub_elections": 0}
+# N/h None = "keep the engine-derived cadence" (pre-routing checkpoints)
+_RESYNC_DEFAULTS = {"measured": [], "N": None, "h_cocodc": None}
+
+
+def upgrade_scheduler_state(st: Dict[str, object]) -> Dict[str, object]:
+    """Upgrade a serialized host-scheduler dict of ANY prior schema version to
+    the current one, filling in exactly what the writing code could not have
+    known about. This is the ONLY place checkpoint back-compat defaults live;
+    `restore_scheduler` reads the upgraded dict without fallbacks."""
+    st = dict(st)
+    # v1 -> v2: pre-dynamics checkpoints carry no dynamics clocks (static
+    # runs never advance them)
+    st.setdefault("dyn_seq", 0)
+    st.setdefault("stall_seconds", 0.0)
+    st.setdefault("n_retries", 0)
+    # v2 -> v3: pre-routing checkpoints have no planner/resync state and
+    # 5-element pending rows (no measured duration)
+    st["pending"] = [list(r)[:6] + [0.0] * (6 - len(r)) for r in st["pending"]]
+    routing = dict(st.get("routing") or {})
+    for k, v in _ROUTING_DEFAULTS.items():
+        routing.setdefault(k, v)
+    st["routing"] = routing
+    resync = dict(st.get("resync") or {})
+    for k, v in _RESYNC_DEFAULTS.items():
+        resync.setdefault(k, v)
+    st["resync"] = resync
+    # v3 -> v4: stamp the version
+    st["schema_version"] = SCHEDULER_SCHEMA_VERSION
+    return st
 
 
 @dataclasses.dataclass
@@ -88,7 +130,8 @@ class ProtocolEngine:
     def __init__(self, method: str, ccfg: CoCoDCConfig, fragmenter: Fragmenter,
                  network, params_stack, *, dc_impl: str = "ref",
                  engine_impl: str = "jit"):
-        assert method in ("diloco", "streaming", "cocodc", "local")
+        # registry lookup — unknown names raise listing registered methods
+        self.method_impl = get_method(method)
         assert engine_impl in ("jit", "host")
         self.method = method
         self.cfg = ccfg
@@ -151,10 +194,10 @@ class ProtocolEngine:
         self._counted_time: "float | None" = None
         self._counted_key = None
         self._counted_hub: "int | None" = None
-        # Eq. 9/10 re-derivation from measured transfer durations (cocodc
-        # only: the other methods have a fixed cadence)
+        # Eq. 9/10 re-derivation from measured transfer durations (methods
+        # with a fixed cadence opt out via the strategy flag)
         self._resync: "adaptive_lib.ResyncState | None" = None
-        if ccfg.adaptive_resync and method == "cocodc":
+        if ccfg.adaptive_resync and self.method_impl.supports_adaptive_resync:
             self._resync = adaptive_lib.ResyncState()
 
         # host-side schedule + stats
@@ -391,27 +434,15 @@ class ProtocolEngine:
 
     def next_event_step(self, t: int) -> "int | None":
         """Smallest step t' >= t at which `on_step_end(t', ...)` performs a
-        protocol action: a scheduled initiation slot, a due delivery, or the
-        DiLoCo blocking round. None for method="local" (the host loop may fuse
-        every remaining step into one scanned segment).
+        protocol action: a scheduled initiation slot, a due delivery, or a
+        blocking round. None when the method schedules no events (e.g.
+        method="local" — the host loop may fuse every remaining step into one
+        scanned segment).
 
-        The schedule of WHEN is deterministic given the host state; WHICH
-        fragment a cocodc initiation picks is data-dependent (Eq. 11), so the
-        caller must re-query after every event."""
-        if self.method == "local":
-            return None
-        if self.method == "diloco":
-            return t + (self.H - 1 - t) % self.H
-        h = self.h_stream if self.method == "streaming" else self.h_cocodc
-        nxt = t if t % h == 0 else t + h - t % h
-        if self._resync is not None:
-            # Eq. 9 re-derivation runs in on_step_end at each outer-round
-            # boundary — that step must be a protocol event, or the segment
-            # loop would fuse it away and diverge from the per-step loop
-            nxt = min(nxt, t + (self.H - 1 - t) % self.H)
-        for ev in self.pending:
-            nxt = min(nxt, max(t, ev.deliver_at))
-        return nxt
+        The schedule of WHEN is the registered `SyncMethod` strategy's call;
+        WHICH fragment a cocodc initiation picks is data-dependent (Eq. 11),
+        so the caller must re-query after every event."""
+        return self.method_impl.next_event_step(self, t)
 
     def advance_steps(self, n: int):
         """Account wall-clock for `n` quiet local steps (no protocol event) —
@@ -423,28 +454,17 @@ class ProtocolEngine:
     # ------------------------------------------------------------- main hook
 
     def on_step_end(self, t: int, params_stack):
-        """Call after inner step t (0-based). Returns updated params_stack."""
+        """Call after inner step t (0-based). Ticks the wall-clock, then
+        dispatches the method strategy's protocol action (blocking round,
+        delivery processing + initiation, or nothing). Returns the updated
+        params_stack."""
         self.wall_clock += self.topology.t_c
-        if self.method == "local":
-            return params_stack
+        return self.method_impl.on_step_end(self, t, params_stack)
 
-        if self.method == "diloco":
-            if (t + 1) % self.H == 0:
-                finish, _ = self._schedule_transfer(self.frag.total_bytes)
-                self.wall_clock = max(self.wall_clock, finish)   # BLOCKING
-                self.state, params_stack = self._fns.diloco_round(
-                    self.state, params_stack)
-            return params_stack
-
-        # --- overlapped methods ---------------------------------------------
-        if self._planner is not None:
-            # roll the plan state to the CURRENT wall-clock before any device
-            # decision this step (a queued future transfer may have pulled
-            # the cached plan ahead of simulated time — availability and
-            # pricing must reflect now, not the future)
-            self._active_plan(self.wall_clock)
-
-        # deliveries due at this step
+    def _process_deliveries(self, t: int, params_stack):
+        """Apply every in-flight delivery due at step t (delivery order:
+        deliver_at, then initiation seq) and feed measured durations to the
+        Eq. 9 re-derivation window. Shared by all overlapped strategies."""
         due = sorted((ev for ev in self.pending if ev.deliver_at <= t),
                      key=lambda e: (e.deliver_at, e.seq))
         for ev in due:
@@ -454,26 +474,6 @@ class ProtocolEngine:
             if self._resync is not None:
                 # a COMPLETED transfer's measured duration is shared history
                 self._resync.observe(ev.duration)
-
-        # --- initiations ----------------------------------------------------
-        if self.method == "streaming":
-            if t % self.h_stream == 0:
-                p = (t // self.h_stream) % self.K
-                if all(ev.frag != p for ev in self.pending):
-                    self._initiate(t, params_stack, p)
-        else:  # cocodc
-            if t % self.h_cocodc == 0:
-                busy = {ev.frag for ev in self.pending}
-                if len(busy) < self.K:
-                    p = self._select_cocodc(t, busy)
-                    self._initiate(t, params_stack, p)
-            if self._resync is not None and (t + 1) % self.H == 0:
-                # end of an outer round: re-derive Eq. 9's N / Eq. 10's h
-                # from the measured T_s so next round's cadence tracks the
-                # network the run actually sees
-                self.N, self.h_cocodc = adaptive_lib.rederive_schedule(
-                    self._resync, self.K, self.H, self.topology.t_c,
-                    self.cfg.net_utilization, self._t_s_startup)
         return params_stack
 
     # ---------------------------------------------------------- checkpointing
@@ -484,6 +484,7 @@ class ProtocolEngine:
         WAN-channel clocks, and traffic accounting. The simulated wall-clock
         itself lives in TrainerState (single authority), not here."""
         return {
+            "schema_version": SCHEDULER_SCHEMA_VERSION,
             "pending": [[ev.frag, ev.t_init, ev.deliver_at, ev.finish_time,
                          ev.seq, ev.duration] for ev in self.pending],
             "seq": self._seq,
@@ -522,12 +523,14 @@ class ProtocolEngine:
         }
 
     def restore_scheduler(self, st: Dict[str, object]):
-        """Inverse of `scheduler_state` (EngineState is restored separately)."""
+        """Inverse of `scheduler_state` (EngineState is restored separately).
+        Accepts any prior schema version — `upgrade_scheduler_state` is the
+        single upgrade path; no per-field fallbacks live here."""
+        st = upgrade_scheduler_state(st)
         self.pending = [PendingSync(frag=int(r[0]), t_init=int(r[1]),
                                     deliver_at=int(r[2]),
                                     finish_time=float(r[3]), seq=int(r[4]),
-                                    # absent in pre-routing checkpoints
-                                    duration=float(r[5]) if len(r) > 5 else 0.0)
+                                    duration=float(r[5]))
                         for r in st["pending"]]
         self._seq = int(st["seq"])
         self.comm_seconds = float(st["comm_seconds"])
@@ -537,16 +540,15 @@ class ProtocolEngine:
         self.worker_available = [bool(x) for x in st["worker_available"]]
         self.link_bytes = np.asarray(st["link_bytes"], dtype=np.float64)
         self.link_seconds = np.asarray(st["link_seconds"], dtype=np.float64)
-        # absent in pre-dynamics checkpoints (static runs never advance them)
-        self._dyn_seq = int(st.get("dyn_seq", 0))
-        self.stall_seconds = float(st.get("stall_seconds", 0.0))
-        self.n_retries = int(st.get("n_retries", 0))
-        routing = st.get("routing") or {}
-        self.reroutes = int(routing.get("reroutes", 0))
-        self.hub_elections = int(routing.get("hub_elections", 0))
+        self._dyn_seq = int(st["dyn_seq"])
+        self.stall_seconds = float(st["stall_seconds"])
+        self.n_retries = int(st["n_retries"])
+        routing = st["routing"]
+        self.reroutes = int(routing["reroutes"])
+        self.hub_elections = int(routing["hub_elections"])
         self._plan_dark = {int(row[0]): bool(row[1])
-                           for row in routing.get("plan_dark", [])}
-        plan_time = float(routing.get("plan_time", -1.0))
+                           for row in routing["plan_dark"]}
+        plan_time = float(routing["plan_time"])
         self._plan = None
         self._plan_time = None
         self._counted_time = None
@@ -561,19 +563,19 @@ class ProtocolEngine:
                 self._plan_time = plan_time
                 self._plan = self._planner.plan_at(plan_time)
                 self._frag_cost = self._plan_frag_cost(self._plan)
-            counted_time = float(routing.get("counted_time", -1.0))
+            counted_time = float(routing["counted_time"])
             if counted_time >= 0.0:
                 counted = self._planner.plan_at(counted_time)
                 self._counted_time = counted_time
                 self._counted_key = counted.route_key()
                 self._counted_hub = counted.hub
-        resync = st.get("resync") or {}
+        resync = st["resync"]
         if self._resync is not None:
-            self._resync.measured = [float(x)
-                                     for x in resync.get("measured", [])]
-        if resync:
-            self.N = int(resync.get("N", self.N))
-            self.h_cocodc = int(resync.get("h_cocodc", self.h_cocodc))
+            self._resync.measured = [float(x) for x in resync["measured"]]
+        if resync["N"] is not None:
+            self.N = int(resync["N"])
+        if resync["h_cocodc"] is not None:
+            self.h_cocodc = int(resync["h_cocodc"])
 
     # ---------------------------------------------------------------- stats
 

@@ -94,6 +94,13 @@ jax.tree_util.register_dataclass(
 
 CKPT_FORMAT = "trainer_state_v1"
 
+# Checkpoint-meta schema. One upgrade path (`CrossRegionTrainer._upgrade_meta`)
+# replaces the scattered `.get(..., default)` back-compat reads:
+#   v1 — ad-hoc per-key trajectory meta (keys accreted over PRs 2-4)
+#   v2 (PR 5) — + schema_version stamp, spec dict + spec_hash (primary
+#     resume validation for spec-built trainers)
+META_SCHEMA_VERSION = 2
+
 
 @functools.lru_cache(maxsize=None)
 def _jit_gen_frames():
@@ -164,10 +171,16 @@ class CrossRegionTrainer:
     def __init__(self, model_cfg: ModelConfig, ccfg: CoCoDCConfig,
                  tcfg: TrainerConfig,
                  network: Optional["NetworkModel | Topology"] = None,
-                 dynamics: Optional[str] = None, dynamics_seed: int = 0):
+                 dynamics: Optional[str] = None, dynamics_seed: int = 0,
+                 spec: Optional[Any] = None):
         self.mcfg = model_cfg
         self.ccfg = ccfg
         self.tcfg = tcfg
+        # the declarative ExperimentSpec this trainer was built from
+        # (repro.api.build_experiment); None when constructed directly.
+        # Rides into checkpoints as meta["spec"]/meta["spec_hash"] — the
+        # primary resume-identity check.
+        self.spec = spec
         M = ccfg.num_workers
 
         key = jax.random.PRNGKey(tcfg.seed)
@@ -385,6 +398,11 @@ class CrossRegionTrainer:
         dicts — msgpack-safe), the host scheduler, eval history, and identity
         metadata for resume validation."""
         ts = self.trainer_state()
+        meta = {"schema_version": META_SCHEMA_VERSION,
+                "arch": self.mcfg.name, **self._traj_meta()}
+        if self.spec is not None:
+            meta["spec"] = self.spec.to_dict()
+            meta["spec_hash"] = self.spec.spec_hash
         return {
             "format": CKPT_FORMAT,
             "trainer_state": {
@@ -398,7 +416,7 @@ class CrossRegionTrainer:
             },
             "scheduler": self.engine.scheduler_state(),
             "history": self.history,
-            "meta": {"arch": self.mcfg.name, **self._traj_meta()},
+            "meta": meta,
         }
 
     def _traj_meta(self) -> Dict[str, Any]:
@@ -418,15 +436,69 @@ class CrossRegionTrainer:
                 "routing": c.routing, "hub_failover": c.hub_failover,
                 "adaptive_resync": c.adaptive_resync}
 
-    def _traj_meta_defaults(self) -> Dict[str, Any]:
-        """Meta keys added after trainer_state_v1 shipped: a checkpoint
-        written before a key existed implies whatever the key-less code did
-        with THIS config (pre-PR3 fragmentation came from strided_fragments;
-        pre-PR4 runs had no routed planner or Eq. 9 re-derivation)."""
-        return {"fragment_strategy":
-                "strided" if self.ccfg.strided_fragments else "contiguous",
-                "routing": "static", "hub_failover": False,
-                "adaptive_resync": False}
+    def _upgrade_meta(self, meta: Dict[str, Any]) -> Dict[str, Any]:
+        """Single upgrade path for checkpoint meta of any prior schema
+        version (the meta twin of `protocol.upgrade_scheduler_state`). A key
+        a v1 checkpoint predates implies whatever the key-less code did with
+        THIS config: pre-PR3 fragmentation came from strided_fragments;
+        pre-PR4 runs had no routed planner or Eq. 9 re-derivation; pre-PR5
+        runs carried no spec."""
+        meta = dict(meta)
+        meta.setdefault("fragment_strategy",
+                        "strided" if self.ccfg.strided_fragments
+                        else "contiguous")
+        meta.setdefault("routing", "static")
+        meta.setdefault("hub_failover", False)
+        meta.setdefault("adaptive_resync", False)
+        meta.setdefault("spec", None)
+        meta.setdefault("spec_hash", None)
+        meta["schema_version"] = META_SCHEMA_VERSION
+        return meta
+
+    def _validate_resume_identity(self, meta: Dict[str, Any]):
+        """Reject a resume whose run identity differs from this trainer's.
+        Spec-built trainers compare `spec_hash` (the digest of every
+        trajectory-determining spec field); the error names the differing
+        fields. Directly-constructed trainers (and pre-spec checkpoints)
+        fall back to the per-key trajectory-meta comparison."""
+        if self.spec is not None and meta["spec_hash"] is not None:
+            if meta["spec_hash"] == self.spec.spec_hash:
+                return
+            detail = ""
+            if isinstance(meta["spec"], dict):
+                from repro.api.spec import (_VOLATILE_RUN_FIELDS,
+                                            ExperimentSpec, diff_specs)
+                try:
+                    saved = ExperimentSpec.from_dict(meta["spec"]).traj_dict()
+                except ValueError:
+                    # e.g. a checkpoint from a newer version with unknown
+                    # spec fields: diff the raw dict, but strip the labels
+                    # and volatile run fields traj_dict() excludes so the
+                    # message only names genuine trajectory differences
+                    saved = {k: v for k, v in meta["spec"].items()
+                             if k not in ("name", "note")}
+                    if isinstance(saved.get("run"), dict):
+                        run = {k: v for k, v in saved["run"].items()
+                               if k not in _VOLATILE_RUN_FIELDS}
+                        # mirror RunSpec.resolved_warmup so a defaulted
+                        # warmup is not reported as a spurious diff
+                        if run.get("warmup_steps") is None and \
+                                isinstance(run.get("steps"), int):
+                            run["warmup_steps"] = max(10, run["steps"] // 20)
+                        saved["run"] = run
+                diffs = diff_specs(saved, self.spec.traj_dict())
+                detail = "; differing fields: " + "; ".join(diffs)
+            raise ValueError(
+                f"checkpoint was written by a different experiment spec "
+                f"(spec_hash {meta['spec_hash']} != {self.spec.spec_hash})"
+                f"{detail}")
+        for k, want in (("arch", self.mcfg.name), *self._traj_meta().items()):
+            if meta.get(k) != want:
+                raise ValueError(
+                    f"checkpoint {k}={meta.get(k)!r} != trainer {want!r} — "
+                    f"resume requires the saved run's config (data streams, "
+                    f"LR schedule, and the protocol event schedule derive "
+                    f"from it)")
 
     def save_checkpoint(self, path: str):
         save_pytree(path, self.checkpoint_state())
@@ -441,14 +513,7 @@ class CrossRegionTrainer:
         st = load_pytree(path) if state is None else state
         if st.get("format") != CKPT_FORMAT:
             raise ValueError(f"not a {CKPT_FORMAT} checkpoint: {path}")
-        meta = st["meta"]
-        defaults = self._traj_meta_defaults()
-        for k, want in (("arch", self.mcfg.name), *self._traj_meta().items()):
-            if meta.get(k, defaults.get(k)) != want:
-                raise ValueError(
-                    f"checkpoint {k}={meta.get(k)!r} != trainer {want!r} — "
-                    f"resume requires the saved run's config (data streams, LR "
-                    f"schedule, and the protocol event schedule derive from it)")
+        self._validate_resume_identity(self._upgrade_meta(st["meta"]))
         ts = st["trainer_state"]
         self.params_stack = restore_like(self.params_stack, ts["params_stack"])
         self.opt_state = AdamWState(

@@ -3,8 +3,15 @@
     PYTHONPATH=src python -m repro.launch.train --arch paper_150m --method cocodc \
         --steps 400 --workers 4 --local-batch 4 --seq-len 64
 
+Every run is defined by a declarative `ExperimentSpec` (repro.api): the CLI
+flags map onto spec fields, `--spec path.json` launches from a saved spec
+(explicit flags override its fields), and `--print-spec` emits the composed
+spec as JSON without training — feed it back via `--spec` to reproduce the
+run bitwise. The trainer itself is always constructed through
+`repro.api.build_experiment`.
+
 Runs the full stack: synthetic non-IID per-worker data -> worker-stacked inner
-AdamW -> protocol engine (DiLoCo / Streaming DiLoCo / CoCoDC) -> periodic
+AdamW -> protocol engine (any registered sync method) -> periodic
 consensus-model eval -> checkpoint.
 """
 from __future__ import annotations
@@ -16,111 +23,126 @@ import os
 import sys
 import time
 
-from repro.configs import CoCoDCConfig, get_config
-from repro.core.network import (MESH_PROFILES, SCENARIOS, generate_mesh,
-                                make_scenario)
-from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+from repro.api import ExperimentSpec, build_experiment, registered_methods
+from repro.core.network import MESH_PROFILES, SCENARIOS
 
 
-def build(args):
-    mcfg = get_config(args.arch)
-    if args.reduced:
-        mcfg = mcfg.reduced()
-    ccfg = CoCoDCConfig(
-        num_workers=args.workers, local_steps=args.H,
-        num_fragments=args.fragments, overlap_depth=args.tau,
-        comp_lambda=args.comp_lambda, net_utilization=args.gamma,
-        mixing_alpha=args.alpha, link_pricing=args.link_pricing,
-        fragment_strategy=args.fragment_strategy,
-        routing=args.routing, hub_failover=args.hub_failover,
-        adaptive_resync=args.adaptive_resync)
-    tcfg = TrainerConfig(
-        method=args.method, local_batch=args.local_batch, seq_len=args.seq_len,
-        total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
-        seed=args.seed, inner_lr=args.lr, engine_impl=args.engine_impl,
-        loop=args.loop)
-    network = None
-    if args.mesh is not None:
-        if args.topology is not None:
-            raise SystemExit("--mesh and --topology are mutually exclusive")
-        network = generate_mesh(args.workers, args.mesh, seed=args.mesh_seed,
-                                step_time_s=args.step_time)
-    elif args.topology is not None:
-        # "paper" keeps the calibrated-symmetric default (network=None) so the
-        # fragment-size calibration in CrossRegionTrainer still applies
-        if args.topology != "paper":
-            network = make_scenario(args.topology, num_workers=args.workers,
-                                    step_time_s=args.step_time)
-    return CrossRegionTrainer(mcfg, ccfg, tcfg, network=network,
-                              dynamics=args.dynamics,
-                              dynamics_seed=args.mesh_seed)
+def spec_from_args(args) -> ExperimentSpec:
+    """Map CLI flags onto an ExperimentSpec. With --spec, the file is the
+    base and explicitly-passed flags override its fields; without, the spec
+    dataclass defaults are the CLI defaults. (Every flag defaults to None =
+    "not passed"; boolean flags are three-state — `--x` / `--no-x` / unset —
+    so a spec-file boolean can be cleared from the CLI, e.g.
+    `--spec routed.json --method streaming --no-adaptive-resync`.)"""
+    spec = (ExperimentSpec.from_json_file(args.spec) if args.spec
+            else ExperimentSpec())
+
+    def over(obj, **kw):
+        kw = {k: v for k, v in kw.items() if v is not None}
+        return dataclasses.replace(obj, **kw) if kw else obj
+
+    model = over(spec.model, arch=args.arch, reduced=args.reduced)
+    ext = over(spec.method.extensions,
+               fragment_strategy=args.fragment_strategy,
+               link_pricing=args.link_pricing,
+               adaptive_resync=args.adaptive_resync)
+    method = over(spec.method, name=args.method, num_workers=args.workers,
+                  local_steps=args.H, num_fragments=args.fragments,
+                  overlap_depth=args.tau, comp_lambda=args.comp_lambda,
+                  net_utilization=args.gamma, mixing_alpha=args.alpha)
+    method = dataclasses.replace(method, extensions=ext)
+    network = over(spec.network, topology=args.topology, mesh=args.mesh,
+                   mesh_seed=args.mesh_seed, dynamics=args.dynamics,
+                   step_time_s=args.step_time, routing=args.routing,
+                   hub_failover=args.hub_failover)
+    run = over(spec.run, steps=args.steps, seed=args.seed, inner_lr=args.lr,
+               local_batch=args.local_batch, seq_len=args.seq_len,
+               eval_every=args.eval_every, ckpt_every=args.ckpt_every,
+               engine_impl=args.engine_impl, loop=args.loop)
+    return dataclasses.replace(spec, model=model, method=method,
+                               network=network, run=run)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="paper_150m")
-    ap.add_argument("--reduced", action="store_true",
+def make_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Cross-region training driver. Flag defaults are the "
+                    "ExperimentSpec defaults (shown in --print-spec); with "
+                    "--spec, flags you pass explicitly override the file.")
+    ap.add_argument("--spec", default=None,
+                    help="launch from a saved ExperimentSpec JSON "
+                         "(experiments/specs/*.json); explicit flags override")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the composed ExperimentSpec as JSON and exit "
+                         "(feed it back via --spec to reproduce the run)")
+    ap.add_argument("--arch", default=None, help="architecture config id "
+                    "(default paper_150m)")
+    ap.add_argument("--reduced", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="use the reduced smoke variant of the arch (CPU-friendly)")
-    ap.add_argument("--method", default="cocodc",
-                    choices=["diloco", "streaming", "cocodc", "local"])
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--H", type=int, default=100)
-    ap.add_argument("--fragments", type=int, default=4)
-    ap.add_argument("--tau", type=int, default=5)
-    ap.add_argument("--comp-lambda", type=float, default=0.5)
-    ap.add_argument("--gamma", type=float, default=0.4)
-    ap.add_argument("--alpha", type=float, default=0.5)
-    ap.add_argument("--lr", type=float, default=4e-4)
-    ap.add_argument("--local-batch", type=int, default=4)
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--eval-every", type=int, default=50)
+    ap.add_argument("--method", default=None,
+                    choices=sorted(registered_methods()),
+                    help="registered sync method (default cocodc)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--H", type=int, default=None, help="local steps per round")
+    ap.add_argument("--fragments", type=int, default=None)
+    ap.add_argument("--tau", type=int, default=None)
+    ap.add_argument("--comp-lambda", type=float, default=None)
+    ap.add_argument("--gamma", type=float, default=None)
+    ap.add_argument("--alpha", type=float, default=None)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--local-batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--eval-every", type=int, default=None)
     ap.add_argument("--topology", default=None, choices=sorted(SCENARIOS),
                     help="heterogeneous WAN scenario (default: calibrated "
                          "symmetric paper network)")
     ap.add_argument("--mesh", default=None, choices=sorted(MESH_PROFILES),
                     help="generated N-region mesh profile (N = --workers); "
                          "mutually exclusive with --topology")
-    ap.add_argument("--mesh-seed", type=int, default=0,
+    ap.add_argument("--mesh-seed", type=int, default=None,
                     help="seed for --mesh generation and --dynamics draws")
     ap.add_argument("--dynamics", default=None,
                     help="time-varying link dynamics spec, e.g. "
                          "'diurnal:period=240:depth=0.6,hub_failure:start=100:"
                          "dur=50,jitter:frac=0.05' (see "
                          "repro.core.network.parse_dynamics)")
-    ap.add_argument("--fragment-strategy", default="",
+    ap.add_argument("--fragment-strategy", default=None,
                     choices=["", "strided", "contiguous", "skewed"],
                     help="model fragmentation strategy ('' = strided)")
-    ap.add_argument("--step-time", type=float, default=1.0,
+    ap.add_argument("--step-time", type=float, default=None,
                     help="T_c seconds per local step for --topology/--mesh "
                          "scenarios")
-    ap.add_argument("--engine-impl", default="jit", choices=["jit", "host"],
+    ap.add_argument("--engine-impl", default=None, choices=["jit", "host"],
                     help="jitted EngineState transitions vs eager host path")
-    ap.add_argument("--loop", default="segment", choices=["segment", "per_step"],
+    ap.add_argument("--loop", default=None, choices=["segment", "per_step"],
                     help="segment-scanned execution engine (one lax.scan "
                          "dispatch per inter-event segment) vs the legacy "
                          "one-dispatch-per-step loop")
-    ap.add_argument("--link-pricing", action="store_true",
+    ap.add_argument("--link-pricing", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="Algorithm-2 link-aware fragment pricing (R_p/T_s,p)")
-    ap.add_argument("--routing", default="static",
+    ap.add_argument("--routing", default=None,
                     choices=["static", "routed"],
                     help="routed communication plans: every collective runs "
                          "over deterministic multi-hop min-cost routes "
                          "computed against the CURRENT link state, re-planned "
                          "at each dynamics edge (static = fixed "
-                         "ring/hierarchical formulas, bitwise PR 3 behavior)")
-    ap.add_argument("--hub-failover", action="store_true",
+                         "ring/hierarchical formulas)")
+    ap.add_argument("--hub-failover", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="with --routing routed: re-elect the next-best-"
                          "connected region as hub while the declared hub's "
                          "links are out (restored on recovery); fully dark "
                          "regions drop out of the collective")
-    ap.add_argument("--adaptive-resync", action="store_true",
+    ap.add_argument("--adaptive-resync", default=None,
+                    action=argparse.BooleanOptionalAction,
                     help="re-derive Eq. 9's target sync count N (and Eq. "
                          "10's h) each outer round from measured transfer "
                          "durations (cocodc)")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=0,
+    ap.add_argument("--ckpt-every", type=int, default=None,
                     help="atomically checkpoint the FULL run state to --ckpt "
                          "every N steps (segment boundaries)")
     ap.add_argument("--resume", default=None,
@@ -129,14 +151,26 @@ def main(argv=None):
                          "a legacy dict restores theta_g/momentum only")
     ap.add_argument("--stop-at", type=int, default=None,
                     help="pause the run at this absolute step (the LR schedule "
-                         "still spans --steps); checkpoint with --ckpt and "
-                         "continue later with --resume")
+                         "still spans the spec's steps); checkpoint with "
+                         "--ckpt and continue later with --resume")
     ap.add_argument("--history-out", default=None)
+    return ap
+
+
+def main(argv=None):
+    ap = make_parser()
     args = ap.parse_args(argv)
-    if args.ckpt_every and not args.ckpt:
+    try:
+        spec = spec_from_args(args).validate()
+    except (ValueError, OSError) as e:
+        ap.error(str(e))
+    if args.print_spec:
+        print(spec.to_json())
+        return 0
+    if spec.run.ckpt_every and not args.ckpt:
         ap.error("--ckpt-every requires --ckpt (nowhere to save)")
 
-    trainer = build(args)
+    trainer = build_experiment(spec)
     if args.resume:
         from repro.checkpoint import load_pytree
         from repro.core.trainer import CKPT_FORMAT
@@ -163,9 +197,9 @@ def main(argv=None):
             print(f"resumed (legacy: theta_g/momentum only) from {args.resume} "
                   f"(step {state.get('step')})")
     t0 = time.time()
-    hist = trainer.run(steps=args.stop_at, eval_every=args.eval_every,
+    hist = trainer.run(steps=args.stop_at, eval_every=spec.run.eval_every,
                        log=lambda s: print(s, flush=True),
-                       ckpt_path=args.ckpt, ckpt_every=args.ckpt_every)
+                       ckpt_path=args.ckpt, ckpt_every=spec.run.ckpt_every)
     dt = time.time() - t0
     stats = trainer.engine.stats()
     link_stats = trainer.engine.link_stats()
@@ -175,7 +209,7 @@ def main(argv=None):
         print(f"dynamic links: stalled {stats['stall_seconds']:.1f}s "
               f"({stats['stall_fraction']*100:.0f}% of WAN time), "
               f"{int(stats['n_retries'])} outage retries", flush=True)
-    if args.routing == "routed":
+    if spec.network.routing == "routed":
         print(f"routed planner: {int(stats['reroutes'])} reroutes, "
               f"{int(stats['hub_elections'])} hub elections", flush=True)
     if link_stats["links"]:
@@ -191,7 +225,8 @@ def main(argv=None):
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)
         with open(args.history_out, "w") as f:
-            json.dump({"args": vars(args), "history": hist, "stats": stats,
+            json.dump({"args": vars(args), "spec": spec.to_dict(),
+                       "history": hist, "stats": stats,
                        "link_stats": link_stats}, f, indent=1)
         print(f"history -> {args.history_out}")
     return 0

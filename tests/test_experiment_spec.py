@@ -1,0 +1,351 @@
+"""Declarative experiment API: spec JSON round-trips, cross-field validation,
+the sync-method registry, legacy-flags-vs-spec bitwise parity, spec_hash
+resume validation, and the --print-spec -> --spec -> resume CLI loop."""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentSpec, MethodExtensions, MethodSpec, ModelRef,
+                       NetworkSpec, RunSpec, SyncMethod, build_experiment,
+                       get_method, register_method, registered_methods,
+                       unregister_method)
+from repro.core.protocol import (SCHEDULER_SCHEMA_VERSION,
+                                 upgrade_scheduler_state)
+from repro.launch.train import main as train_main
+from repro.launch.train import make_parser, spec_from_args
+
+
+def tiny_spec(**run_kw) -> ExperimentSpec:
+    run = dict(steps=12, local_batch=2, seq_len=16, inner_lr=3e-3,
+               warmup_steps=2, eval_batch=4, eval_every=6, noniid_frac=0.25)
+    run.update(run_kw)
+    return ExperimentSpec(
+        model=ModelRef(arch="bench_tiny"),
+        method=MethodSpec(name="cocodc", num_workers=2, local_steps=6,
+                          num_fragments=2, overlap_depth=2),
+        run=RunSpec(**run))
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_spec_dict_roundtrip_identity():
+    spec = tiny_spec()
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_spec_file_roundtrip_identity(tmp_path):
+    spec = dataclasses.replace(
+        tiny_spec(), name="rt", note="round-trip",
+        network=NetworkSpec(mesh="ring", mesh_seed=3,
+                            dynamics="diurnal:period=24:depth=0.5",
+                            bw_scale="auto"))
+    path = spec.save(os.path.join(tmp_path, "s.json"))
+    rt = ExperimentSpec.from_json_file(path)
+    assert rt == spec
+    assert rt.spec_hash == spec.spec_hash
+
+
+def test_spec_json_number_coercion_keeps_hash_stable():
+    """A JSON integer in a float field (e.g. "mixing_alpha": 1) must coerce
+    to float so the canonical form — and the hash — is stable."""
+    spec = tiny_spec()
+    d = spec.to_dict()
+    d["method"]["mixing_alpha"] = 1
+    a = ExperimentSpec.from_dict(d)
+    d["method"]["mixing_alpha"] = 1.0
+    b = ExperimentSpec.from_dict(d)
+    assert a == b and a.spec_hash == b.spec_hash
+    assert isinstance(a.method.mixing_alpha, float)
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown top-level"):
+        ExperimentSpec.from_dict({"modle": {}})
+    with pytest.raises(ValueError, match="unknown spec field"):
+        ExperimentSpec.from_dict({"run": {"stepz": 10}})
+    with pytest.raises(ValueError, match="method.extensions"):
+        ExperimentSpec.from_dict(
+            {"method": {"extensions": {"link_prcing": True}}})
+
+
+# ---------------------------------------------------------------------------
+# cross-field validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_mesh_topology_exclusive():
+    spec = dataclasses.replace(
+        tiny_spec(), network=NetworkSpec(mesh="ring", topology="asym4"))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        spec.validate()
+
+
+def test_validate_routed_needs_explicit_network():
+    spec = dataclasses.replace(tiny_spec(), network=NetworkSpec(routing="routed"))
+    with pytest.raises(ValueError, match="routed"):
+        spec.validate()
+    # with a mesh it passes
+    dataclasses.replace(
+        tiny_spec(), network=NetworkSpec(mesh="ring", routing="routed")).validate()
+
+
+def test_validate_hub_failover_needs_routed():
+    spec = dataclasses.replace(tiny_spec(),
+                               network=NetworkSpec(mesh="ring",
+                                                   hub_failover=True))
+    with pytest.raises(ValueError, match="hub_failover"):
+        spec.validate()
+
+
+def test_validate_adaptive_resync_needs_cocodc():
+    spec = dataclasses.replace(
+        tiny_spec(),
+        method=dataclasses.replace(
+            tiny_spec().method, name="diloco",
+            extensions=MethodExtensions(adaptive_resync=True)))
+    with pytest.raises(ValueError, match="adaptive_resync"):
+        spec.validate()
+
+
+def test_validate_unknown_method_lists_registered():
+    spec = dataclasses.replace(
+        tiny_spec(), method=dataclasses.replace(tiny_spec().method,
+                                                name="quantum_sgd"))
+    with pytest.raises(ValueError, match="registered methods"):
+        spec.validate()
+    with pytest.raises(ValueError, match="cocodc"):
+        spec.validate()
+
+
+def test_validate_unknown_arch_and_scenarios():
+    with pytest.raises(ValueError, match="unknown arch"):
+        dataclasses.replace(tiny_spec(), model=ModelRef(arch="gpt9")).validate()
+    with pytest.raises(ValueError, match="unknown mesh"):
+        dataclasses.replace(tiny_spec(),
+                            network=NetworkSpec(mesh="torus")).validate()
+    with pytest.raises(ValueError, match="unknown topology"):
+        dataclasses.replace(tiny_spec(),
+                            network=NetworkSpec(topology="moon")).validate()
+
+
+# ---------------------------------------------------------------------------
+# sync-method registry
+# ---------------------------------------------------------------------------
+
+
+def test_get_method_error_lists_registered():
+    with pytest.raises(ValueError) as e:
+        get_method("nope")
+    for name in ("diloco", "streaming", "cocodc", "local"):
+        assert name in str(e.value)
+    assert set(registered_methods()) >= {"diloco", "streaming", "cocodc",
+                                         "local"}
+
+
+def test_custom_method_registers_and_runs():
+    """A new strategy registered via @register_method is selectable by name
+    end-to-end (spec -> build_experiment -> ProtocolEngine) with no core
+    edits — here: streaming with a double-rate cadence."""
+    @register_method
+    class EagerStreaming(type(get_method("streaming"))):
+        name = "eager_streaming"
+
+        def sync_interval(self, eng):
+            return max(1, eng.h_stream // 2)
+
+        def initiate_due(self, eng, t, params_stack):
+            h = self.sync_interval(eng)
+            if t % h == 0:
+                p = (t // h) % eng.K
+                if all(ev.frag != p for ev in eng.pending):
+                    eng._initiate(t, params_stack, p)
+
+    try:
+        assert "eager_streaming" in registered_methods()
+        spec = dataclasses.replace(
+            tiny_spec(steps=8),
+            method=dataclasses.replace(tiny_spec().method,
+                                       name="eager_streaming"))
+        tr = build_experiment(spec)
+        hist = tr.run(eval_every=8, log=lambda s: None)
+        assert np.isfinite(hist[-1]["nll"])
+        assert tr.engine.n_syncs > 0
+    finally:
+        unregister_method("eager_streaming")
+    with pytest.raises(ValueError, match="eager_streaming"):
+        get_method("eager_streaming")
+
+
+def test_unknown_method_raises_in_engine():
+    """The former bare `assert method in (...)` is now a registry lookup with
+    an actionable error, surfaced through the trainer stack too."""
+    spec = tiny_spec()
+    bad = dataclasses.replace(spec.method, name="not_a_method")
+    with pytest.raises(ValueError, match="registered methods"):
+        build_experiment(dataclasses.replace(spec, method=bad))
+
+
+# ---------------------------------------------------------------------------
+# flags vs spec parity
+# ---------------------------------------------------------------------------
+
+FLAGS = ["--arch", "bench_tiny", "--method", "cocodc", "--workers", "2",
+         "--H", "6", "--fragments", "2", "--tau", "2", "--steps", "12",
+         "--local-batch", "2", "--seq-len", "16", "--lr", "0.003",
+         "--eval-every", "6"]
+
+
+def _history_and_params(tr):
+    tr.run(eval_every=6, log=lambda s: None)
+    return tr.history, jax.tree.leaves(tr.params_stack)
+
+
+def test_flags_and_spec_produce_bitwise_identical_trajectories():
+    """Acceptance: the same flags and the equivalent spec construct trainers
+    with identical short trajectories (eval history and final params
+    bitwise-equal)."""
+    args = make_parser().parse_args(FLAGS)
+    spec_flags = spec_from_args(args)
+    spec_manual = dataclasses.replace(tiny_spec(), run=dataclasses.replace(
+        tiny_spec().run, warmup_steps=None, eval_batch=16))
+    assert spec_flags == spec_manual
+    assert spec_flags.spec_hash == spec_manual.spec_hash
+
+    h_a, p_a = _history_and_params(build_experiment(spec_flags))
+    h_b, p_b = _history_and_params(build_experiment(spec_manual))
+    assert len(h_a) == len(h_b) > 0
+    for ra, rb in zip(h_a, h_b):
+        assert ra["nll"] == rb["nll"]
+        assert ra["train_loss"] == rb["train_loss"]
+        assert ra["wall_clock_s"] == rb["wall_clock_s"]
+    for x, y in zip(p_a, p_b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# spec_hash + resume validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_hash_ignores_volatile_fields_only():
+    base = tiny_spec()
+    # eval/checkpoint cadence and the bitwise-pinned execution knobs do not
+    # change the trajectory -> same hash
+    same = dataclasses.replace(
+        base, name="other", run=dataclasses.replace(
+            base.run, eval_every=3, ckpt_every=4, loop="per_step",
+            engine_impl="host", eval_batch=2, max_segment=32))
+    assert same.spec_hash == base.spec_hash
+    # any trajectory-determining field changes it
+    for variant in (
+            dataclasses.replace(base, run=dataclasses.replace(base.run, seed=1)),
+            dataclasses.replace(base, run=dataclasses.replace(base.run, steps=13)),
+            dataclasses.replace(base, method=dataclasses.replace(
+                base.method, local_steps=7)),
+            dataclasses.replace(base, network=NetworkSpec(mesh="ring")),
+            dataclasses.replace(base, model=ModelRef(arch="bench_tiny",
+                                                     reduced=True))):
+        assert variant.spec_hash != base.spec_hash, variant
+
+
+def test_spec_hash_resume_rejects_mismatched_spec(tmp_path):
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    tr = build_experiment(tiny_spec(steps=6))
+    tr.run(eval_every=6, log=lambda s: None)
+    tr.save_checkpoint(ck)
+
+    # identical spec resumes cleanly
+    build_experiment(tiny_spec(steps=6)).restore_checkpoint(ck)
+
+    # a different seed is rejected, naming the differing field
+    other = tiny_spec(steps=6, seed=1)
+    with pytest.raises(ValueError, match=r"run\.seed"):
+        build_experiment(other).restore_checkpoint(ck)
+
+    # a spec-less (directly constructed) trainer still validates per-key
+    from repro.core.trainer import CrossRegionTrainer
+    from repro.api import resolve_model
+    spec = tiny_spec(steps=6)
+    direct = CrossRegionTrainer(resolve_model(spec),
+                                spec.method.to_cocodc(spec.network),
+                                spec.run.to_trainer_config("diloco"))
+    with pytest.raises(ValueError, match="method"):
+        direct.restore_checkpoint(ck)
+
+
+def test_checkpoint_meta_carries_spec(tmp_path):
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    spec = tiny_spec(steps=6)
+    tr = build_experiment(spec)
+    tr.run(eval_every=6, log=lambda s: None)
+    tr.save_checkpoint(ck)
+    from repro.checkpoint import load_pytree
+    meta = load_pytree(ck)["meta"]
+    assert meta["spec_hash"] == spec.spec_hash
+    assert ExperimentSpec.from_dict(meta["spec"]) == spec
+    assert meta["schema_version"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# versioned scheduler-state schema (one upgrade path)
+# ---------------------------------------------------------------------------
+
+
+def test_upgrade_scheduler_state_from_v1():
+    v1 = {"pending": [[0, 1, 3, 4.0, 0]], "seq": 1, "comm_seconds": 4.0,
+          "bytes_sent": 100, "n_syncs": 1, "channel_free": [4.0],
+          "worker_available": [True, True],
+          "link_bytes": np.zeros((2, 2)), "link_seconds": np.zeros((2, 2))}
+    up = upgrade_scheduler_state(v1)
+    assert up["schema_version"] == SCHEDULER_SCHEMA_VERSION
+    assert up["pending"] == [[0, 1, 3, 4.0, 0, 0.0]]    # duration appended
+    assert up["dyn_seq"] == 0 and up["n_retries"] == 0
+    assert up["routing"]["plan_time"] == -1.0
+    assert up["routing"]["plan_dark"] == []
+    assert up["resync"]["N"] is None                    # keep engine-derived
+    # current-version state passes through unchanged
+    v4 = dict(up, dyn_seq=7, routing=dict(up["routing"], reroutes=2))
+    up2 = upgrade_scheduler_state(v4)
+    assert up2["dyn_seq"] == 7 and up2["routing"]["reroutes"] == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI: --print-spec -> --spec -> resume reproduces the run bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_cli_print_spec_spec_resume_bitwise(tmp_path, capsys):
+    """Acceptance: a spec saved with --print-spec, fed back via --spec, and
+    resumed from its checkpoint reproduces the original flags-run bitwise."""
+    flags = FLAGS + ["--seed", "3"]
+    ref_hist = os.path.join(tmp_path, "ref.json")
+    assert train_main(flags + ["--history-out", ref_hist]) == 0
+    capsys.readouterr()
+
+    assert train_main(flags + ["--print-spec"]) == 0
+    spec_path = os.path.join(tmp_path, "spec.json")
+    with open(spec_path, "w") as f:
+        f.write(capsys.readouterr().out)
+
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    assert train_main(["--spec", spec_path, "--stop-at", "6",
+                       "--ckpt", ck]) == 0
+    res_hist = os.path.join(tmp_path, "res.json")
+    assert train_main(["--spec", spec_path, "--resume", ck,
+                       "--history-out", res_hist]) == 0
+
+    ref = {r["step"]: r for r in json.load(open(ref_hist))["history"]}
+    res = {r["step"]: r for r in json.load(open(res_hist))["history"]}
+    shared = sorted(set(ref) & set(res))
+    assert shared, "no common eval steps"
+    for s in shared:
+        assert ref[s]["nll"] == res[s]["nll"]
+        assert ref[s]["wall_clock_s"] == res[s]["wall_clock_s"]
