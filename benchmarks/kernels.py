@@ -102,6 +102,27 @@ def main() -> dict:
     emit("kernel/flash_decode_8k", us, f"tpu_roofline_us={tpu_us:.1f}")
     out["flash_decode"] = {"cpu_us": us, "tpu_us": tpu_us}
 
+    # delta_codec: bandwidth-bound single-pass stream — encode reads 4 B/elem
+    # and writes bits/8 (+ scales); decode is the mirror. ~3 flops/elem keeps
+    # both far left of the ridge, so the roofline is the HBM stream.
+    from repro.kernels.delta_codec import ops as codec_ops
+    n = 4_000_000
+    x = jax.random.normal(jax.random.fold_in(key, 15), (n,))
+    for codec, bits in (("int8", 8), ("int4", 4)):
+        fe = jax.jit(lambda x, c=codec: codec_ops.encode_array(
+            x, codec=c, block=256))
+        us = bench(lambda x: fe(x)[0], x)
+        packed, scales = fe(x)
+        fd = jax.jit(lambda p, s, c=codec: codec_ops.decode_array(
+            p, s, x.shape, x.dtype, codec=c, block=256))
+        dus = bench(fd, packed, scales)
+        enc_bytes = n * 4 + n * bits // 8 + (n // 256) * 4
+        tpu_us = enc_bytes / HBM_BW * 1e6
+        emit(f"kernel/delta_codec_{codec}_4M", us,
+             f"decode_us={dus:.0f};tpu_roofline_us={tpu_us:.1f}")
+        out[f"delta_codec_{codec}"] = {"cpu_us": us, "decode_cpu_us": dus,
+                                       "tpu_us": tpu_us}
+
     save_json("kernel_bench", out)
     return out
 

@@ -138,7 +138,21 @@ RUN_SCHEMA = {
 STATS_KEYS = ("wall_clock_s", "comm_seconds", "bytes_sent", "n_syncs",
               "overlap_ratio", "stall_seconds", "stall_fraction", "n_retries",
               "reroutes", "hub_elections",
-              "busiest_link_bytes", "busiest_link_seconds")
+              "busiest_link_bytes", "busiest_link_seconds",
+              "wire_bytes_total", "wire_bytes_raw", "compression_ratio",
+              "mean_transfer_s")
+
+# ---- convergence-vs-bandwidth frontier (PR 6) --------------------------------
+# The frontier re-runs ONE scenario with the wire codec dialed across
+# none/int8/int4 for each method, holding everything else (seed, mesh,
+# dynamics, step budget) fixed, and reports bytes-on-wire, compression ratio,
+# mean transfer seconds, and final perplexity per point. --smoke enforces the
+# int8 acceptance contract against the codec="none" twin.
+FRONTIER_SCENARIO = "n8_geo_diurnal_hub"
+FRONTIER_CODECS = ("none", "int8", "int4")
+FRONTIER_METHODS = ("streaming", "cocodc")
+FRONTIER_MIN_RATIO = 3.5     # int8 wire bytes must drop >= 3.5x vs raw f32
+FRONTIER_PPL_TOL = 0.02      # |ppl - ppl_none| / ppl_none at smoke scale
 
 
 @functools.lru_cache(maxsize=1)
@@ -259,6 +273,12 @@ def validate_payload(payload: dict, scenario: str):
                 fail(f"{method}: stats missing {key!r}")
             if not math.isfinite(float(r["stats"][key])):
                 fail(f"{method}: stats[{key}] not finite")
+        codec = (payload["scenario"].get("spec", {}).get("method", {})
+                 .get("extensions", {}).get("wire_codec", "none"))
+        if codec != "none" and float(r["stats"]["compression_ratio"]) < 1.0:
+            fail(f"{method}: wire_codec={codec} but compression_ratio "
+                 f"{r['stats']['compression_ratio']:.3f} < 1.0 — the codec "
+                 f"is INFLATING the wire")
         for rec in r["history"]:
             if not math.isfinite(rec["nll"]):
                 fail(f"{method}: NaN/inf eval nll at step {rec['step']}")
@@ -299,6 +319,74 @@ def compare_routed(payloads: dict) -> "list[str]":
     return failures
 
 
+def with_codec(spec: ExperimentSpec, codec: str) -> ExperimentSpec:
+    """`spec` re-dialed to ship `codec` on the wire, everything else equal."""
+    ext = dataclasses.replace(spec.method.extensions, wire_codec=codec)
+    return dataclasses.replace(
+        spec, method=dataclasses.replace(spec.method, extensions=ext))
+
+
+def run_frontier(sc: Scenario, methods=FRONTIER_METHODS,
+                 codecs=FRONTIER_CODECS, steps: "int | None" = None) -> dict:
+    """Codec x method frontier over one scenario: every run shares the
+    scenario's seed/mesh/dynamics, only `wire_codec` varies. Keys are
+    "method:codec"."""
+    steps = steps or sc.steps
+    runs = {}
+    for method in methods:
+        for codec in codecs:
+            sc_c = dataclasses.replace(sc, spec=with_codec(sc.spec, codec))
+            r = run_one(sc_c, method, steps)
+            st = r["stats"]
+            runs[f"{method}:{codec}"] = r
+            emit(f"frontier/{sc.name}/{method}/{codec}",
+                 r["host_s"] * 1e6 / steps,
+                 f"ppl={r['final_ppl']:.2f};"
+                 f"wire_MB={st['wire_bytes_total']/1e6:.1f};"
+                 f"ratio={st['compression_ratio']:.2f}x;"
+                 f"mean_transfer={st['mean_transfer_s']:.1f}s")
+    return {"scenario": sc.name, "steps": steps, "methods": list(methods),
+            "codecs": list(codecs), "runs": runs}
+
+
+def validate_frontier(payload: dict) -> "list[str]":
+    """The codec acceptance contract, per method in the frontier payload:
+    the int8 run must move >= FRONTIER_MIN_RATIO x fewer bytes per element
+    (its own raw/wire ratio — invariant to sync-count drift between runs),
+    strictly shrink the mean transfer time vs the codec="none" twin, and
+    land within FRONTIER_PPL_TOL of its perplexity. Any active codec with
+    ratio < 1.0 fails outright."""
+    failures = []
+    name = payload["scenario"]
+    for key, r in payload["runs"].items():
+        method, codec = key.split(":")
+        ratio = float(r["stats"]["compression_ratio"])
+        if codec != "none" and ratio < 1.0:
+            failures.append(f"[{name}] {key}: compression_ratio {ratio:.3f} "
+                            f"< 1.0 under an active codec")
+    for method in payload["methods"]:
+        base = payload["runs"].get(f"{method}:none")
+        int8 = payload["runs"].get(f"{method}:int8")
+        if base is None or int8 is None:
+            continue
+        ratio = float(int8["stats"]["compression_ratio"])
+        bt = float(base["stats"]["mean_transfer_s"])
+        it = float(int8["stats"]["mean_transfer_s"])
+        rel = abs(int8["final_ppl"] - base["final_ppl"]) / base["final_ppl"]
+        if ratio < FRONTIER_MIN_RATIO:
+            failures.append(f"[{name}] {method}: int8 compression_ratio "
+                            f"{ratio:.2f}x < {FRONTIER_MIN_RATIO}x")
+        if not it < bt:
+            failures.append(f"[{name}] {method}: int8 mean_transfer_s {it:.2f}"
+                            f" not strictly below codec=none {bt:.2f}")
+        if rel > FRONTIER_PPL_TOL:
+            failures.append(f"[{name}] {method}: int8 ppl "
+                            f"{int8['final_ppl']:.3f} departs codec=none "
+                            f"{base['final_ppl']:.3f} by {rel*100:.1f}% "
+                            f"(> {FRONTIER_PPL_TOL*100:.0f}%)")
+    return failures
+
+
 def main(argv=None) -> int:
     scenarios = _grid_scenarios()
     ap = argparse.ArgumentParser()
@@ -312,10 +400,17 @@ def main(argv=None) -> int:
                          "compare; exits 1 on schema drift, NaN metrics, or a "
                          "routed run that does not beat its static twin's "
                          "stall fraction")
+    ap.add_argument("--frontier", action="store_true",
+                    help="run ONLY the convergence-vs-bandwidth frontier "
+                         "(codec x method over the diurnal hub-failure mesh); "
+                         "with --smoke: int8-vs-none cocodc acceptance checks "
+                         "at smoke scale")
     args = ap.parse_args(argv)
 
     by_name = {s.name: s for s in scenarios}
-    if args.smoke:
+    if args.frontier:
+        grid = []
+    elif args.smoke:
         # --steps may shorten the quick scenarios but never the routed-vs-
         # static pair below its grid budget: cutting the run before the
         # outage window would fail the strict stall comparison spuriously
@@ -365,7 +460,20 @@ def main(argv=None) -> int:
         failures.extend(routed_failures)
     for f in routed_failures:
         print(f"ROUTED COMPARE FAIL {f}", file=sys.stderr, flush=True)
-    save_json("sweep_summary", summary)
+    if args.frontier:
+        sc = by_name[FRONTIER_SCENARIO]
+        fsteps = args.steps or (12 if args.smoke else None)
+        fmethods = ("cocodc",) if args.smoke else FRONTIER_METHODS
+        fcodecs = ("none", "int8") if args.smoke else FRONTIER_CODECS
+        fpayload = run_frontier(sc, methods=fmethods, codecs=fcodecs,
+                                steps=fsteps)
+        save_json("sweep_frontier", fpayload)
+        frontier_failures = validate_frontier(fpayload)
+        failures.extend(frontier_failures)
+        for f in frontier_failures:
+            print(f"FRONTIER FAIL {f}", file=sys.stderr, flush=True)
+    if summary:   # a pure --frontier run must not clobber the grid summary
+        save_json("sweep_summary", summary)
     if failures:
         print(f"{len(failures)} failure(s)", file=sys.stderr)
         return 1

@@ -121,15 +121,17 @@ def loop_overhead(method: str, loop: str, warm: int = 128,
     return best
 
 
-def engine_overhead(method: str, engine_impl: str, steps: int = 96) -> float:
+def engine_overhead(method: str, engine_impl: str, steps: int = 96,
+                    **ccfg_kw) -> float:
     """Seconds of host+device time per on_step_end call (no inner training),
-    i.e. the coordinator overhead the protocol adds to every local step."""
+    i.e. the coordinator overhead the protocol adds to every local step.
+    `ccfg_kw` overrides protocol knobs (e.g. wire_codec for the codec bench)."""
     import jax.numpy as jnp
     from repro.core.protocol import ProtocolEngine
     from repro.models import api
 
     ccfg = CoCoDCConfig(num_workers=4, local_steps=12, num_fragments=4,
-                        overlap_depth=3)
+                        overlap_depth=3, **ccfg_kw)
     params = api.init_params(BENCH_MODEL, jax.random.PRNGKey(0))
     stack = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (4,) + a.shape).copy(), params)
@@ -150,6 +152,29 @@ def engine_overhead(method: str, engine_impl: str, steps: int = 96) -> float:
         s = eng.on_step_end(t, s)
     jax.block_until_ready(jax.tree.leaves(s)[0])
     return (time.perf_counter() - t0) / steps
+
+
+def codec_encode_throughput(codec: str, n: int = 1 << 21,
+                            reps: int = 4) -> float:
+    """Encoded f32 elements per second of the fused quantize+pack path (the
+    per-initiation codec cost is this stream plus its decode mirror)."""
+    import jax.numpy as jnp
+    from repro.kernels.delta_codec import ops as codec_ops
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    packed, scales = codec_ops.encode_array(x, codec=codec, block=256)
+    jax.block_until_ready(packed)                       # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        packed, scales = codec_ops.encode_array(x, codec=codec, block=256)
+    jax.block_until_ready(packed)
+    return n * reps / (time.perf_counter() - t0)
+
+
+# --smoke guard: a codec-enabled engine step may pay for the quantize+pack
+# round trip but must stay the same order of magnitude as the plain f32
+# initiate — a blowup here means the codec fell off the fused/jitted path
+CODEC_OVERHEAD_MAX_X = 8.0
 
 
 def main(steps: int = 1000, smoke: bool = False) -> dict:
@@ -199,6 +224,28 @@ def main(steps: int = 1000, smoke: bool = False) -> dict:
         overhead[method] = row
     out["engine_overhead"] = overhead
 
+    # wire-codec cost at the two places it can bite: raw fused quantize+pack
+    # throughput (the kernel itself), and the per-step coordinator overhead a
+    # codec-enabled engine pays vs the plain f32 initiate it replaces. The
+    # WAN seconds the codec SAVES are regime-dependent (see the sweep
+    # frontier); this section shows what it costs.
+    codec_rows = {}
+    codec_base = engine_overhead("cocodc", "jit", steps=bench_steps)
+    codec_rows["none"] = {"per_step_s": codec_base}
+    for codec in (("int8",) if smoke else ("int8", "int4")):
+        per = engine_overhead("cocodc", "jit", steps=bench_steps,
+                              wire_codec=codec)
+        thr = codec_encode_throughput(codec)
+        row = {"per_step_s": per,
+               "overhead_x": per / codec_base if codec_base > 0 else 0.0,
+               "encode_elems_per_s": thr}
+        emit(f"codec_overhead/{codec}", per * 1e6,
+             f"per_step={per*1e3:.2f}ms;base={codec_base*1e3:.2f}ms;"
+             f"overhead={row['overhead_x']:.2f}x;"
+             f"encode={thr/1e6:.0f}Melem/s")
+        codec_rows[codec] = row
+    out["codec_overhead"] = codec_rows
+
     # dispatch savings of the segment-scanned execution engine: full training
     # loop (data + inner step + protocol), scanned segments vs per-step.
     # "local" has no protocol events (64-step segments) — the upper bound on
@@ -230,6 +277,13 @@ def main(steps: int = 1000, smoke: bool = False) -> dict:
             raise SystemExit(
                 f"loop_overhead regression: scanned path speedup {worst:.2f}x "
                 f"< 1.0x vs per-step loop")
+        worst_codec = max(r["overhead_x"] for c, r in codec_rows.items()
+                          if c != "none")
+        if worst_codec > CODEC_OVERHEAD_MAX_X:
+            raise SystemExit(
+                f"codec_overhead regression: codec-enabled engine step is "
+                f"{worst_codec:.2f}x the no-codec initiate "
+                f"(> {CODEC_OVERHEAD_MAX_X}x) — codec off the fused path?")
     return out
 
 

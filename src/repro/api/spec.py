@@ -54,6 +54,9 @@ class MethodExtensions:
     sync_topk_frac: float = 1.0      # top-k sparsification; 1.0 = dense
     link_pricing: bool = False       # Algorithm-2 cost-aware selection
     adaptive_resync: bool = False    # per-round Eq. 9 re-derivation
+    wire_codec: str = "none"         # delta wire codec: none | int8 | int4
+    codec_block: int = 256           # elements per absmax quantization block
+    codec_error_feedback: bool = True  # EF residual folded into next initiation
 
 
 @dataclass(frozen=True)
@@ -87,6 +90,8 @@ class MethodSpec:
             sync_dtype=ext.sync_dtype, sync_topk_frac=ext.sync_topk_frac,
             link_pricing=ext.link_pricing,
             adaptive_resync=ext.adaptive_resync,
+            wire_codec=ext.wire_codec, codec_block=ext.codec_block,
+            codec_error_feedback=ext.codec_error_feedback,
             routing=network.routing, hub_failover=network.hub_failover)
 
 
@@ -255,6 +260,14 @@ class ExperimentSpec:
             fail(f"unknown fragment_strategy "
                  f"{self.method.extensions.fragment_strategy!r}; "
                  f"options: {strategies}")
+        ext = self.method.extensions
+        if ext.wire_codec not in ("none", "int8", "int4"):
+            fail(f"method.extensions.wire_codec must be 'none', 'int8' or "
+                 f"'int4', got {ext.wire_codec!r}")
+        if not (2 <= ext.codec_block <= (1 << 16)) or ext.codec_block % 2:
+            fail(f"method.extensions.codec_block must be an even integer in "
+                 f"[2, 65536] (int4 packs element pairs), "
+                 f"got {ext.codec_block}")
         if self.run.loop not in ("segment", "per_step"):
             fail(f"run.loop must be 'segment' or 'per_step', "
                  f"got {self.run.loop!r}")

@@ -182,3 +182,17 @@ class CoCoDCConfig:
     # round from the MEASURED durations of recent transfers, so the cocodc
     # initiation cadence tracks the network the run actually sees.
     adaptive_resync: bool = False
+    # Wire-compression codec for the pseudo-gradient payload (beyond-paper,
+    # Streaming-DiLoCo-style compressed outer deltas): "none" keeps the
+    # f32/sync_dtype wire format bitwise; "int8"/"int4" quantize each delta
+    # per `codec_block`-element block (absmax scaling, kernels/delta_codec)
+    # before it crosses the WAN. The codec subsumes sync_dtype accounting —
+    # whatever dtype the payload was in, the wire carries codes + scales.
+    wire_codec: str = "none"
+    # quantization granularity: one f32 absmax scale ships per `codec_block`
+    # consecutive elements of each leaf (wire overhead 4/codec_block B/elem)
+    codec_block: int = 256
+    # error feedback: keep the per-element quantization residual locally and
+    # fold it into the same elements' next initiation, driving the cumulative
+    # quantization bias to ~0 over repeated syncs (EF-SGD)
+    codec_error_feedback: bool = True

@@ -36,10 +36,21 @@ from repro.configs.base import CoCoDCConfig
 from repro.core import outer_opt
 from repro.core.fragments import Fragmenter
 from repro.core.methods import get_method
+from repro.kernels.delta_codec import ops as codec_ops
 
 
 def _is_none(x):
     return x is None
+
+
+def _tree_add(a, b):
+    return jax.tree.map(lambda x, y: None if x is None else x + y, a, b,
+                        is_leaf=_is_none)
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: None if x is None else x - y, a, b,
+                        is_leaf=_is_none)
 
 
 def tree_broadcast_workers(a, m: int):
@@ -115,6 +126,11 @@ class EngineState:
     last_sync: jax.Array          # (K,) int32 — t_{p,b} of Eq. 11
     rate: jax.Array               # (K,) f32  — R_p of Eq. 11 (+inf = never)
     worker_available: jax.Array   # (M,) bool
+    # wire-codec error-feedback residual: ONE full-model-shaped f32 pytree
+    # (fragments are disjoint, so per-fragment residuals never collide); None
+    # unless an active codec has error feedback on — the codec-off pytree
+    # structure (and every pre-codec checkpoint) is unchanged
+    wire_residual: Any = None
 
 
 jax.tree_util.register_dataclass(
@@ -144,6 +160,10 @@ def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
         last_sync=jnp.full((K,), -H, jnp.int32),
         rate=jnp.full((K,), jnp.inf, jnp.float32),
         worker_available=jnp.ones((M,), bool),
+        wire_residual=(jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
+            if ccfg.wire_codec != "none" and ccfg.codec_error_feedback
+            else None),
     )
 
 
@@ -158,11 +178,18 @@ def state_to_dict(state: EngineState) -> dict:
 def state_from_dict(ref: EngineState, d: dict) -> EngineState:
     """Rebuild an EngineState from `state_to_dict` output, casting every leaf
     to the dtype/shape of the matching leaf in `ref` (a live state from
-    `init_state` — guarantees None-fields and bf16 leaves round-trip)."""
+    `init_state` — guarantees None-fields and bf16 leaves round-trip).
+
+    Fields absent from `d` (e.g. `wire_residual` in a pre-codec checkpoint
+    restored into a codec-enabled engine) keep the freshly-initialized `ref`
+    value — error feedback simply restarts from a zero residual."""
     from repro.checkpoint.io import restore_like
     fields = {}
     for f in dataclasses.fields(EngineState):
-        fields[f.name] = restore_like(getattr(ref, f.name), d[f.name])
+        if f.name in d:
+            fields[f.name] = restore_like(getattr(ref, f.name), d[f.name])
+        else:
+            fields[f.name] = getattr(ref, f.name)
     return EngineState(**fields)
 
 
@@ -187,6 +214,19 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
     `SyncMethod` strategy, not from name branches."""
     M = ccfg.num_workers
     impl = get_method(method)
+    # wire codec: when active, every outgoing delta is quantized+packed and
+    # dequantized+unpacked through kernels/delta_codec at INITIATION — the
+    # in-flight buffer then holds exactly what the receiver reconstructs from
+    # the wire, and `deliver` reads the post-wire payload. Error feedback
+    # (EF-SGD / Streaming DiLoCo style) folds the quantization residual of
+    # each element into the same fragment's NEXT initiation, so the residual
+    # is computed where compression happens. `wire_codec="none"` traces the
+    # exact pre-codec program (no extra ops — bitwise-pinned by tests).
+    codec_active = ccfg.wire_codec != "none"
+
+    def _codec_roundtrip(d):
+        return codec_ops.codec_roundtrip(d, codec=ccfg.wire_codec,
+                                         block=ccfg.codec_block)
 
     def _mask_offline(new_local, old_local, avail):
         return jax.tree.map(
@@ -203,6 +243,19 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
         delta_avg = pseudograd_mean(
             frag_stack, theta_g_frag, state.worker_available,
             sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+        residual = state.wire_residual
+        if codec_active:
+            # fold in the fragment's standing EF residual, push the sum
+            # through the wire codec (quantize+pack -> dequantize+unpack),
+            # and keep what the codec dropped for the next initiation
+            if residual is not None:
+                d_in = _tree_add(delta_avg, frag.extract(residual, p))
+            else:
+                d_in = delta_avg
+            delta_avg = _codec_roundtrip(d_in)
+            if residual is not None:
+                residual = frag.insert(residual, p,
+                                       _tree_sub(d_in, delta_avg))
         snapshot = state.inflight_snapshot
         if impl.keeps_snapshot:
             snapshot = frag.insert(snapshot, p, frag_stack, worker_axis=True)
@@ -213,13 +266,17 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
             inflight_active=state.inflight_active.at[p].set(True),
             inflight_t_init=state.inflight_t_init.at[p].set(t),
             delta_norm=state.delta_norm.at[p].set(tree_norm(delta_avg)),
+            wire_residual=residual,
         )
 
     def deliver(state: EngineState, t, params_stack, p: int):
         """Fragment p's all-reduce completed at step t: outer Nesterov update
         of the global fragment, then the strategy's delivery application
         (Eq. 3 blending, Algorithm-1 delay compensation, ...), then the
-        Eq. 11 rate update."""
+        Eq. 11 rate update. With an active wire codec the in-flight buffer
+        already holds the dequantized post-wire payload (the codec round
+        trip runs at initiation, where the EF residual must be computed), so
+        the delivered delta is exactly what crossed the WAN."""
         delta_avg = frag.extract(state.inflight_delta, p)
         theta_g_frag = frag.extract(state.theta_g, p)
         mom_frag = frag.extract(state.momentum, p)
@@ -254,17 +311,27 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
 
     def diloco_round(state: EngineState, params_stack):
         """Blocking full-model round: all-reduce pseudo-gradients, outer
-        update, available workers restart from the new theta^g."""
+        update, available workers restart from the new theta^g. An active
+        wire codec compresses the full-model delta the same way `initiate`
+        compresses a fragment's."""
         delta_avg = pseudograd_mean(
             params_stack, state.theta_g, state.worker_available,
             sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+        residual = state.wire_residual
+        if codec_active:
+            d_in = (_tree_add(delta_avg, residual) if residual is not None
+                    else delta_avg)
+            delta_avg = _codec_roundtrip(d_in)
+            if residual is not None:
+                residual = _tree_sub(d_in, delta_avg)
         new_g, new_mom = outer_opt.nesterov_update(
             state.theta_g, state.momentum, delta_avg,
             lr=ccfg.outer_lr, mu=ccfg.outer_momentum)
         reset = tree_broadcast_workers(new_g, M)
         params_stack = _mask_offline(reset, params_stack,
                                      state.worker_available)
-        return (dataclasses.replace(state, theta_g=new_g, momentum=new_mom),
+        return (dataclasses.replace(state, theta_g=new_g, momentum=new_mom,
+                                    wire_residual=residual),
                 params_stack)
 
     if use_jit:

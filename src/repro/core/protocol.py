@@ -75,7 +75,9 @@ from repro.core.network import CommPlan, RoutePlanner, Topology, as_topology
 #   v2 (PR 3) — + dynamics clocks (dyn_seq, stall_seconds, n_retries)
 #   v3 (PR 4) — + routing/resync blocks, 6-element pending rows (duration)
 #   v4 (PR 5) — + explicit schema_version stamp
-SCHEDULER_SCHEMA_VERSION = 4
+#   v5 (PR 6) — + wire_bytes_raw (uncompressed payload tally for the
+#               wire-codec compression ratio)
+SCHEDULER_SCHEMA_VERSION = 5
 
 _ROUTING_DEFAULTS = {"plan_time": -1.0, "counted_time": -1.0, "plan_dark": [],
                      "reroutes": 0, "hub_elections": 0}
@@ -105,7 +107,11 @@ def upgrade_scheduler_state(st: Dict[str, object]) -> Dict[str, object]:
     for k, v in _RESYNC_DEFAULTS.items():
         resync.setdefault(k, v)
     st["resync"] = resync
-    # v3 -> v4: stamp the version
+    # v4 -> v5: pre-codec checkpoints never tracked the raw (uncompressed)
+    # payload tally; defaulting it to bytes_sent resumes with ratio 1.0 and
+    # lets the tally diverge from there
+    st.setdefault("wire_bytes_raw", st["bytes_sent"])
+    # stamp the version
     st["schema_version"] = SCHEDULER_SCHEMA_VERSION
     return st
 
@@ -150,9 +156,13 @@ class ProtocolEngine:
                                        dc_impl=dc_impl,
                                        use_jit=(engine_impl == "jit"))
 
-        # Eq. 9/10 scheduling interval
+        # Eq. 9/10 scheduling interval. With an active wire codec the startup
+        # T_s sees the compressed payload (cheaper syncs -> more of them per
+        # round); codec="none" keeps the raw-bytes arithmetic bitwise.
         mean_frag_bytes = self.frag.total_bytes / self.K
-        t_s = self.topology.t_s(int(mean_frag_bytes))
+        t_s = self.topology.t_s(self._wire_bytes(int(mean_frag_bytes))
+                                if ccfg.wire_codec != "none"
+                                else int(mean_frag_bytes))
         self._t_s_startup = t_s
         self.N = adaptive_lib.target_syncs(self.K, self.H, self.topology.t_c,
                                            t_s, ccfg.net_utilization)
@@ -206,6 +216,7 @@ class ProtocolEngine:
         self.wall_clock = 0.0
         self.comm_seconds = 0.0
         self.bytes_sent = 0
+        self.wire_bytes_raw = 0      # uncompressed (f32) payload tally
         self.n_syncs = 0
         self._channel_free = [0.0] * max(1, self.topology.concurrent_collectives)
         m = self.M
@@ -266,9 +277,18 @@ class ProtocolEngine:
 
     def _wire_bytes(self, nbytes: int) -> int:
         """Bytes that actually cross the WAN for an `nbytes` f32 fragment:
-        sync_dtype compression and top-k sparsification (values + indices).
-        ONE accounting rule for blocking and overlapped paths alike."""
-        if jnp.dtype(self.cfg.sync_dtype).itemsize < 4:
+        wire-codec quantization (codes + per-block scales), sync_dtype
+        compression and top-k sparsification (values + indices). ONE
+        accounting rule for blocking and overlapped paths alike."""
+        if self.cfg.wire_codec != "none":
+            # quantized wire format: `bits`-bit codes + one f32 scale per
+            # codec_block elements (kernels/delta_codec). Subsumes sync_dtype
+            # — the codec quantizes whatever dtype the payload was in.
+            from repro.kernels.delta_codec import ops as codec_ops
+            nbytes = codec_ops.wire_bytes(nbytes // 4,
+                                          codec=self.cfg.wire_codec,
+                                          block=self.cfg.codec_block)
+        elif jnp.dtype(self.cfg.sync_dtype).itemsize < 4:
             nbytes = nbytes * jnp.dtype(self.cfg.sync_dtype).itemsize // 4
         if self.cfg.sync_topk_frac < 1.0:
             # sparse wire format: values + indices
@@ -403,6 +423,7 @@ class ProtocolEngine:
             self.link_bytes += self.topology.link_bytes(wire)
         self._channel_free[ch] = finish
         self.bytes_sent += wire
+        self.wire_bytes_raw += int(nbytes)
         self.n_syncs += 1
         return finish, finish - start
 
@@ -490,6 +511,7 @@ class ProtocolEngine:
             "seq": self._seq,
             "comm_seconds": self.comm_seconds,
             "bytes_sent": self.bytes_sent,
+            "wire_bytes_raw": self.wire_bytes_raw,
             "n_syncs": self.n_syncs,
             "channel_free": [float(x) for x in self._channel_free],
             "worker_available": [bool(x) for x in self.worker_available],
@@ -535,6 +557,7 @@ class ProtocolEngine:
         self._seq = int(st["seq"])
         self.comm_seconds = float(st["comm_seconds"])
         self.bytes_sent = int(st["bytes_sent"])
+        self.wire_bytes_raw = int(st["wire_bytes_raw"])
         self.n_syncs = int(st["n_syncs"])
         self._channel_free = [float(x) for x in st["channel_free"]]
         self.worker_available = [bool(x) for x in st["worker_available"]]
@@ -584,7 +607,15 @@ class ProtocolEngine:
             "wall_clock_s": float(self.wall_clock),
             "comm_seconds": float(self.comm_seconds),
             "bytes_sent": float(self.bytes_sent),
+            "wire_bytes_total": float(self.bytes_sent),
+            "wire_bytes_raw": float(self.wire_bytes_raw),
+            "compression_ratio": float(
+                1.0 if self.bytes_sent == 0
+                else self.wire_bytes_raw / self.bytes_sent),
             "n_syncs": float(self.n_syncs),
+            "mean_transfer_s": float(
+                0.0 if self.n_syncs == 0
+                else self.comm_seconds / self.n_syncs),
             "overlap_ratio": float(0.0 if self.wall_clock == 0 else
                                    min(1.0, self.comm_seconds / self.wall_clock)),
             "target_syncs_N": float(self.N),

@@ -99,7 +99,9 @@ CKPT_FORMAT = "trainer_state_v1"
 #   v1 — ad-hoc per-key trajectory meta (keys accreted over PRs 2-4)
 #   v2 (PR 5) — + schema_version stamp, spec dict + spec_hash (primary
 #     resume validation for spec-built trainers)
-META_SCHEMA_VERSION = 2
+#   v3 (PR 6) — + wire-codec trajectory knobs (wire_codec, codec_block,
+#     codec_error_feedback); pre-codec checkpoints upgrade to "none"
+META_SCHEMA_VERSION = 3
 
 
 @functools.lru_cache(maxsize=None)
@@ -434,7 +436,9 @@ class CrossRegionTrainer:
                 "overlap_depth": c.overlap_depth,
                 "fragment_strategy": self.fragmenter.strategy,
                 "routing": c.routing, "hub_failover": c.hub_failover,
-                "adaptive_resync": c.adaptive_resync}
+                "adaptive_resync": c.adaptive_resync,
+                "wire_codec": c.wire_codec, "codec_block": c.codec_block,
+                "codec_error_feedback": c.codec_error_feedback}
 
     def _upgrade_meta(self, meta: Dict[str, Any]) -> Dict[str, Any]:
         """Single upgrade path for checkpoint meta of any prior schema
@@ -452,6 +456,10 @@ class CrossRegionTrainer:
         meta.setdefault("adaptive_resync", False)
         meta.setdefault("spec", None)
         meta.setdefault("spec_hash", None)
+        # pre-PR6 checkpoints predate the wire codec: raw f32/sync_dtype wire
+        meta.setdefault("wire_codec", "none")
+        meta.setdefault("codec_block", 256)
+        meta.setdefault("codec_error_feedback", True)
         meta["schema_version"] = META_SCHEMA_VERSION
         return meta
 
@@ -464,6 +472,18 @@ class CrossRegionTrainer:
         if self.spec is not None and meta["spec_hash"] is not None:
             if meta["spec_hash"] == self.spec.spec_hash:
                 return
+            if isinstance(meta["spec"], dict):
+                from repro.api.spec import ExperimentSpec
+                try:
+                    # a checkpoint written before newer spec fields existed
+                    # stores a hash over the field-less dict; re-hashing the
+                    # SAVED spec with current code fills the new defaults, so
+                    # a match proves the stored run is trajectory-identical
+                    if ExperimentSpec.from_dict(
+                            meta["spec"]).spec_hash == self.spec.spec_hash:
+                        return
+                except ValueError:
+                    pass
             detail = ""
             if isinstance(meta["spec"], dict):
                 from repro.api.spec import (_VOLATILE_RUN_FIELDS,

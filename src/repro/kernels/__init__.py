@@ -12,6 +12,8 @@ Kernels:
   rwkv6_scan      — chunked RWKV-6 WKV recurrence (matrix-valued head state)
   rms_norm        — fused RMSNorm (one HBM pass)
   flash_decode    — one-token GQA attention over ring-buffer KV caches (serving)
+  delta_codec     — fused per-block absmax int8/int4 quantize+pack and
+                    dequantize+unpack for the WAN delta wire format
 
 `tpu_compiler_params` papers over the Pallas API rename: the TPU compiler-params
 class is `pltpu.TPUCompilerParams` up to jax 0.4.x and `pltpu.CompilerParams`
@@ -22,3 +24,11 @@ from jax.experimental.pallas import tpu as _pltpu
 # version-compatible alias (TPUCompilerParams was renamed to CompilerParams)
 tpu_compiler_params = getattr(_pltpu, "CompilerParams", None) or getattr(
     _pltpu, "TPUCompilerParams")
+
+
+def is_cpu() -> bool:
+    """True when the default JAX backend is CPU — every kernel wrapper uses
+    this single probe to pick interpret mode (and the big-array oracle
+    shortcut) instead of re-implementing its own backend check."""
+    import jax
+    return jax.default_backend() == "cpu"

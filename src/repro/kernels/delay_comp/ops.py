@@ -12,12 +12,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu as _is_cpu
 from repro.kernels.delay_comp.delay_comp import LANES, delay_comp_2d
 from repro.kernels.delay_comp.ref import delay_comp_ref
-
-
-def _is_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def delay_comp_array(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,

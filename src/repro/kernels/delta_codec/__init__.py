@@ -1,0 +1,2 @@
+"""Fused delta-codec kernels for the WAN wire format (quantize+pack /
+dequantize+unpack). See ops.py for the public pytree-level API."""

@@ -1,0 +1,110 @@
+"""Pallas TPU kernels: fused per-block absmax quantize+pack and
+dequantize+unpack for the WAN delta wire format.
+
+Both directions are single-pass and bandwidth-bound: encode reads each f32
+element once and writes 1 byte (int8) or half a byte (int4) plus one f32
+scale per block; decode is the mirror image. The arithmetic is ~3 flops per
+element — far below the TPU ridge point — so the roofline is the HBM stream
+(see benchmarks/kernels.py and benchmarks/roofline.py).
+
+Tiling: the wrapper reshapes each flat leaf to (nblocks, block) — one row per
+quantization block — and pads the block axis to a multiple of 2*LANES so the
+int4 halves-packed output keeps a 128-lane-aligned last axis. Each grid step
+owns a row-chunk tile; per-row absmax reduces along lanes inside the tile.
+Scales are emitted broadcast to (rows, LANES) (lane-aligned f32 stores); the
+wrapper keeps column 0. Zero padding never perturbs a block's absmax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.delta_codec.ref import LEVELS
+
+LANES = 128
+BLOCK_ROWS = 256          # rows per grid step at block == 2*LANES; scaled
+                          # down for wider blocks to bound the VMEM tile
+
+
+def _tile_rows(nblocks: int, block: int) -> int:
+    rows = max(8, (BLOCK_ROWS * 2 * LANES) // max(block, 2 * LANES))
+    return min(rows, nblocks)
+
+
+def _quant(x, levels):
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    # reciprocal multiply, matching ref.quantize_ref bitwise (see note there)
+    scale = absmax * jnp.float32(1.0 / levels)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -levels, levels).astype(jnp.int32)
+    return q, scale
+
+
+def _encode_kernel(x_ref, packed_ref, scale_ref, *, bits):
+    x = x_ref[...].astype(jnp.float32)
+    q, scale = _quant(x, LEVELS[bits])
+    if bits == 4:
+        half = q.shape[1] // 2
+        q = (q[:, :half] & 0xF) | ((q[:, half:] & 0xF) << 4)
+    packed_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = jnp.broadcast_to(scale, scale_ref.shape)
+
+
+def _decode_kernel(packed_ref, scale_ref, out_ref, *, bits):
+    scale = scale_ref[...][:, :1]
+    b = packed_ref[...].astype(jnp.int32)
+    if bits == 4:
+        lo = ((b & 0xF) ^ 8) - 8            # sign-extend low nibble
+        hi = (((b >> 4) & 0xF) ^ 8) - 8     # sign-extend high nibble
+        q = jnp.concatenate([lo, hi], axis=1)
+    else:
+        q = b
+    out_ref[...] = q.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pack_2d(x, *, bits: int, interpret: bool = False):
+    """x: (nblocks, block) f32, block a multiple of 2*LANES. Returns
+    (packed int8 (nblocks, block*bits//8), scales f32 (nblocks,))."""
+    nblocks, block = x.shape
+    rows = _tile_rows(nblocks, block)
+    grid = (pl.cdiv(nblocks, rows),)
+    pb = block * bits // 8
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, pb), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nblocks, pb), jnp.int8),
+                   jax.ShapeDtypeStruct((nblocks, LANES), jnp.float32)],
+        interpret=interpret,
+        name=f"delta_codec_encode_int{bits}",
+    )(x)
+    packed, scales = out
+    return packed, scales[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequantize_unpack_2d(packed, scales, *, bits: int, interpret: bool = False):
+    """Inverse of `quantize_pack_2d`: (nblocks, block*bits//8) int8 + (nblocks,)
+    f32 scales -> (nblocks, block) f32."""
+    nblocks, pb = packed.shape
+    block = pb * 8 // bits
+    rows = _tile_rows(nblocks, block)
+    grid = (pl.cdiv(nblocks, rows),)
+    scales2d = jnp.broadcast_to(scales[:, None], (nblocks, LANES))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, pb), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block), jnp.float32),
+        interpret=interpret,
+        name=f"delta_codec_decode_int{bits}",
+    )(packed, scales2d)

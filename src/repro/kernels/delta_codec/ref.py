@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the delta wire codec: per-block absmax int8/int4
+quantization of pseudo-gradient payloads, with nibble packing for int4.
+
+Wire format (per flat leaf, padded to a whole number of `block`-element
+blocks; one row below = one block):
+
+    scale   = absmax(block) / levels        levels = 127 (int8) | 7 (int4)
+    codes   = clip(round(x / scale), -levels, levels)        — int8 values
+    int8 payload: the codes verbatim, 1 byte/element
+    int4 payload: halves-packed — element i of the block's FIRST half rides
+        in the low nibble of byte i, element i of the SECOND half in the
+        high nibble (contiguous-slice packing, lane-friendly on TPU)
+
+An all-zero block has scale 0 and codes 0; dequantize returns exact zeros.
+Scales ship as one f32 per block (the +4/block bytes in the wire-format
+accounting, `ops.wire_bytes`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LEVELS = {8: 127, 4: 7}
+
+
+def quantize_ref(x2d, *, bits: int):
+    """(nblocks, block) f32 -> (codes int8 (nblocks, block), scales (nblocks,))."""
+    levels = LEVELS[bits]
+    x = x2d.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    # explicit f32 reciprocal multiply: XLA rewrites division-by-constant into
+    # this form inside jit, so spelling it out keeps the eager oracle and the
+    # jitted kernel bitwise-identical
+    scale = absmax * jnp.float32(1.0 / levels)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -levels, levels)
+    return q.astype(jnp.int8), scale
+
+
+def pack_ref(codes, *, bits: int):
+    """int8 codes -> wire bytes; int4 packs the block halves into nibbles."""
+    if bits == 8:
+        return codes
+    half = codes.shape[1] // 2
+    lo = codes[:, :half].astype(jnp.int32)
+    hi = codes[:, half:].astype(jnp.int32)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+def _sext4(nibble):
+    """Sign-extend a 4-bit two's-complement value held in an int32."""
+    return ((nibble & 0xF) ^ 8) - 8
+
+
+def unpack_ref(packed, *, bits: int):
+    if bits == 8:
+        return packed
+    b = packed.astype(jnp.int32)
+    lo = _sext4(b)
+    hi = _sext4(b >> 4)
+    return jnp.concatenate([lo, hi], axis=1).astype(jnp.int8)
+
+
+def dequantize_ref(codes, scales):
+    return codes.astype(jnp.float32) * scales[:, None]
+
+
+def encode_ref(x2d, *, bits: int):
+    """Fused quantize+pack: (nblocks, block) f32 -> (packed int8, scales f32)."""
+    codes, scales = quantize_ref(x2d, bits=bits)
+    return pack_ref(codes, bits=bits), scales
+
+
+def decode_ref(packed, scales, *, bits: int):
+    """Fused dequantize+unpack: inverse of `encode_ref` (up to quantization)."""
+    return dequantize_ref(unpack_ref(packed, bits=bits), scales)
+
+
+def roundtrip_ref(x2d, *, bits: int):
+    """What the receiver reconstructs: decode(encode(x))."""
+    packed, scales = encode_ref(x2d, bits=bits)
+    return decode_ref(packed, scales, bits=bits)

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu
 from repro.kernels.flash_attention.flash_attention import (DEFAULT_BK, DEFAULT_BQ,
                                                            flash_attention_bhsd)
 
@@ -15,7 +16,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, bq=DEFAULT_BQ,
     Pads S to block multiples, transposes to (B, H, S, hd) for the kernel."""
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
-    interpret = jax.default_backend() == "cpu"
+    interpret = is_cpu()
     bq = min(bq, max(Sq, 8))
     bk = min(bk, max(Sk, 8))
     pad_q = (-Sq) % bq

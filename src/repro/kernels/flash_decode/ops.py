@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu
 from repro.kernels.flash_decode.flash_decode import BLOCK_C, flash_decode_bkv
 
 
@@ -15,7 +16,7 @@ def flash_decode(q, k_cache, v_cache, kv_positions, q_position, *, window=None,
     B, H, hd = q.shape
     C, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
-    interpret = jax.default_backend() == "cpu"
+    interpret = is_cpu()
     bc = min(bc, max(C, 8))
     pad = (-C) % bc
     kt = jnp.moveaxis(k_cache, 2, 1)                    # (B, KV, C, hd)

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu
 from repro.kernels.rglru_scan.rglru_scan import BLOCK_D, BLOCK_T, lru_scan_btd
 
 
@@ -13,7 +14,7 @@ def lru_scan(a, b, h0=None, *, bt=BLOCK_T, bd=BLOCK_D):
     a = a.astype(jnp.float32)
     b = b.astype(jnp.float32)
     h0 = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
-    interpret = jax.default_backend() == "cpu"
+    interpret = is_cpu()
     bt = min(bt, T)
     bd = min(bd, D)
     pad_t = (-T) % bt

@@ -4,12 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu
 from repro.kernels.rms_norm.rms_norm import BLOCK_ROWS, rms_norm_2d
 
 
 def rms_norm(x, weight, eps: float = 1e-5):
     """x: (..., D); weight: (D,). Fused Pallas RMSNorm."""
-    interpret = jax.default_backend() == "cpu"
+    interpret = is_cpu()
     shape = x.shape
     D = shape[-1]
     x2 = x.reshape(-1, D)

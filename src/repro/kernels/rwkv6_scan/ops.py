@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import is_cpu
 from repro.kernels.rwkv6_scan.rwkv6_scan import BLOCK_T, wkv_scan_bht
 
 
@@ -11,7 +12,7 @@ def wkv_scan(r, k, v, w, u, s0=None, *, bt=BLOCK_T):
     """r,k,v,w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) f32 or None.
     Returns (o: (B, T, H, hd), sT: (B, H, hd, hd) f32)."""
     B, T, H, hd = r.shape
-    interpret = jax.default_backend() == "cpu"
+    interpret = is_cpu()
     bt = min(bt, T)
     pad_t = (-T) % bt
 

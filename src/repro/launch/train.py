@@ -45,7 +45,10 @@ def spec_from_args(args) -> ExperimentSpec:
     ext = over(spec.method.extensions,
                fragment_strategy=args.fragment_strategy,
                link_pricing=args.link_pricing,
-               adaptive_resync=args.adaptive_resync)
+               adaptive_resync=args.adaptive_resync,
+               wire_codec=args.wire_codec,
+               codec_block=args.codec_block,
+               codec_error_feedback=args.codec_error_feedback)
     method = over(spec.method, name=args.method, num_workers=args.workers,
                   local_steps=args.H, num_fragments=args.fragments,
                   overlap_depth=args.tau, comp_lambda=args.comp_lambda,
@@ -141,6 +144,19 @@ def make_parser() -> argparse.ArgumentParser:
                     help="re-derive Eq. 9's target sync count N (and Eq. "
                          "10's h) each outer round from measured transfer "
                          "durations (cocodc)")
+    ap.add_argument("--wire-codec", default=None,
+                    choices=["none", "int8", "int4"],
+                    help="quantize pseudo-gradient deltas before the WAN "
+                         "(per-block absmax, kernels/delta_codec); none "
+                         "keeps the raw f32/sync_dtype wire bitwise")
+    ap.add_argument("--codec-block", default=None, type=int,
+                    help="elements per quantization block (one f32 scale "
+                         "ships per block; default 256)")
+    ap.add_argument("--codec-error-feedback", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="keep quantization residuals locally and fold them "
+                         "into the next initiation of the same elements "
+                         "(EF-SGD; default on)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="atomically checkpoint the FULL run state to --ckpt "

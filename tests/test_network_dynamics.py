@@ -443,7 +443,9 @@ def test_sweep_validate_payload_catches_drift():
                          "n_syncs", "overlap_ratio", "stall_seconds",
                          "stall_fraction", "n_retries", "reroutes",
                          "hub_elections", "busiest_link_bytes",
-                         "busiest_link_seconds")},
+                         "busiest_link_seconds", "wire_bytes_total",
+                         "wire_bytes_raw", "compression_ratio",
+                         "mean_transfer_s")},
               "link_stats": {"links": {"a->b": {}}}}}}
     validate_payload(ok, "ok")                     # no raise
     bad = {**ok, "runs": {"cocodc": {**ok["runs"]["cocodc"],
