@@ -12,7 +12,9 @@ JSON artifacts under experiments/.
   roofline    — deliverable (g): three-term roofline from the dry-run artifacts
   sweep       — dynamic-WAN scenario x method grid (generated meshes,
                 diurnal/outage dynamics; per-scenario JSON under
-                experiments/sweep/; scenarios are experiments/specs/*.json)
+                experiments/sweep/; scenarios are experiments/specs/*.json;
+                with --fast runs --smoke incl. the routed-vs-static stall
+                gate and the fairshare-vs-serial transfer-time gate)
   spec_smoke  — declarative-path guard: every experiments/specs/*.json
                 round-trips + runs via repro.api.build_experiment, and the
                 CLI flag path maps onto the identical spec

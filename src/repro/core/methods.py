@@ -225,10 +225,15 @@ class CoCoDC(OverlappedMethod):
         if eng._resync is not None and (t + 1) % eng.H == 0:
             # end of an outer round: re-derive Eq. 9's N / Eq. 10's h from
             # the measured T_s so next round's cadence tracks the network
-            # the run actually sees
+            # the run actually sees. Under the fair-share scheduler the
+            # durations include contention, so the latency/bandwidth
+            # decomposition isolates the congestion-sensitive term (the
+            # serial path keeps the window-mean arithmetic byte-for-byte).
             eng.N, eng.h_cocodc = adaptive_lib.rederive_schedule(
                 eng._resync, eng.K, eng.H, eng.topology.t_c,
-                eng.cfg.net_utilization, eng._t_s_startup)
+                eng.cfg.net_utilization, eng._t_s_startup,
+                decompose=(eng.cfg.channel_scheduler == "fairshare"),
+                ref_bytes=eng._ref_wire_bytes, lat_s=eng._lat_startup)
 
     def apply_delivery(self, ccfg, dc_impl, *, local_now, snapshot, g_b,
                        t, t_init):

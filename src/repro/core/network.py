@@ -266,6 +266,11 @@ class Topology:
                              f"got {lat.shape} vs {bw.shape}")
         if self.collective not in ("ring", "hierarchical"):
             raise ValueError(f"unknown collective {self.collective!r}")
+        if int(self.concurrent_collectives) < 1:
+            raise ValueError(
+                f"concurrent_collectives must be >= 1 (the serial scheduler "
+                f"needs at least one WAN channel), got "
+                f"{self.concurrent_collectives}")
         object.__setattr__(self, "latency_s", lat)
         object.__setattr__(self, "bandwidth_Bps", bw)
         if not self.regions:
@@ -444,6 +449,8 @@ class Topology:
         p = len(plan.participants)
         if p <= 1 or not plan.logical:
             return 0.0
+        if plan.multiroutes:
+            return self._multiroute_allreduce_time(plan, nbytes)
         lats, bws = self._plan_route_costs(plan)
         if plan.kind == "ring":
             chunk = nbytes / p
@@ -458,6 +465,32 @@ class Topology:
                     if i == h)
         return gather + bcast
 
+    def _multiroute_allreduce_time(self, plan: "CommPlan",
+                                   nbytes: int) -> float:
+        """Multipath variant: a logical link's cost is the max over its
+        subflows (each pays its own path latency + its byte share over the
+        path's bottleneck bandwidth); completion = slowest subflow."""
+        p = len(plan.participants)
+
+        def group_cost(group, b):
+            return max(
+                sum(self.latency_s[x, y] for x, y in route)
+                + share * b / min(self.bandwidth_Bps[x, y] for x, y in route)
+                for route, share in group)
+
+        if plan.kind == "ring":
+            chunk = nbytes / p
+            phase = max(group_cost(g, chunk) for g in plan.multiroutes)
+            return 2 * (p - 1) * phase
+        h = plan.hub
+        gather = max(group_cost(g, nbytes)
+                     for (i, j), g in zip(plan.logical, plan.multiroutes)
+                     if j == h)
+        bcast = max(group_cost(g, nbytes)
+                    for (i, j), g in zip(plan.logical, plan.multiroutes)
+                    if i == h)
+        return gather + bcast
+
     def plan_link_bytes(self, plan: "CommPlan", nbytes: int) -> np.ndarray:
         """(M, M) bytes each directed PHYSICAL link carries for one collective
         routed per `plan` (every hop of a logical link's route carries that
@@ -469,9 +502,9 @@ class Topology:
             return out
         per_logical = (2 * (p - 1) * nbytes / p if plan.kind == "ring"
                        else nbytes)
-        for route in plan.routes:
+        for route, share in plan.iter_routes():
             for a, b in route:
-                out[a, b] += per_logical
+                out[a, b] += per_logical * share
         return out
 
     def plan_link_seconds(self, plan: "CommPlan", nbytes: int) -> np.ndarray:
@@ -484,15 +517,28 @@ class Topology:
             return out
         if plan.kind == "ring":
             phases, chunk = 2 * (p - 1), nbytes / p
-            for route in plan.routes:
+            for route, share in plan.iter_routes():
                 for a, b in route:
                     out[a, b] += phases * (
-                        self.latency_s[a, b] + chunk / self.bandwidth_Bps[a, b])
+                        self.latency_s[a, b]
+                        + share * chunk / self.bandwidth_Bps[a, b])
         else:
-            for route in plan.routes:
+            for route, share in plan.iter_routes():
                 for a, b in route:
                     out[a, b] += (self.latency_s[a, b]
-                                  + nbytes / self.bandwidth_Bps[a, b])
+                                  + share * nbytes / self.bandwidth_Bps[a, b])
+        return out
+
+    def plan_link_bw_seconds(self, plan: "CommPlan",
+                             nbytes: int) -> np.ndarray:
+        """(M, M) pure bandwidth busy-seconds per directed physical link for
+        one planned collective — `plan_link_seconds` minus the latency-phase
+        terms. These are the fair-share scheduler's per-link weights: a link's
+        entry is the byte volume it carries over its static bandwidth."""
+        b = self.plan_link_bytes(plan, nbytes)
+        out = np.zeros_like(b)
+        nz = b > 0.0
+        out[nz] = b[nz] / self.bandwidth_Bps[nz]
         return out
 
     def plan_transfer_time(self, plan: "CommPlan", nbytes: int, start: float,
@@ -638,6 +684,16 @@ class Topology:
                 out[i, j] += self.latency_s[i, j] + nbytes / self.bandwidth_Bps[i, j]
         return out
 
+    def link_bw_seconds(self, nbytes: int) -> np.ndarray:
+        """(M, M) pure bandwidth busy-seconds per directed link for one
+        collective (`link_seconds` minus the latency terms) — the fair-share
+        scheduler's per-link weights on an unplanned (static) topology."""
+        b = self.link_bytes(nbytes)
+        out = np.zeros_like(b)
+        nz = b > 0.0
+        out[nz] = b[nz] / self.bandwidth_Bps[nz]
+        return out
+
     # ------------------------------------------------------------- mutations
 
     def degrade_link(self, i: int, j: int, *, bandwidth_factor: float = 1.0,
@@ -693,7 +749,13 @@ class CommPlan:
     ``logical`` are the collective's logical links (ring neighbor pairs or
     spoke<->hub pairs over the PARTICIPANTS — regions whose links are not all
     dark); ``routes[i]`` is the chain of directed physical hops logical link i
-    actually traverses (a single direct hop on a healthy network)."""
+    actually traverses (a single direct hop on a healthy network).
+
+    ``multiroutes`` (optional) splits each logical link's payload across k
+    edge-disjoint paths: ``multiroutes[i]`` is a tuple of ``(route, share)``
+    pairs whose shares sum to 1. Empty () keeps every cost function on the
+    single-path arithmetic byte-for-byte; when non-empty it fully describes
+    the traffic (``routes`` stays the primary path for display)."""
     kind: str                                        # "ring" | "hierarchical"
     hub: int                                         # effective hub
     participants: Tuple[int, ...]
@@ -701,12 +763,25 @@ class CommPlan:
     routes: Tuple[Tuple[Tuple[int, int], ...], ...]
     valid_from: float
     valid_until: float
+    multiroutes: Tuple[Tuple[Tuple[Tuple[Tuple[int, int], ...], float],
+                             ...], ...] = ()
+
+    def iter_routes(self):
+        """(route, byte_share) pairs over all logical links — multiroute-aware
+        (share = 1.0 on single-path plans)."""
+        if self.multiroutes:
+            for group in self.multiroutes:
+                for route, share in group:
+                    yield route, share
+        else:
+            for route in self.routes:
+                yield route, 1.0
 
     @property
     def phys_links(self) -> Tuple[Tuple[int, int], ...]:
         """Unique directed physical hops the plan uses (first-use order)."""
         seen: List[Tuple[int, int]] = []
-        for route in self.routes:
+        for route, _ in self.iter_routes():
             for hop in route:
                 if hop not in seen:
                     seen.append(hop)
@@ -716,8 +791,16 @@ class CommPlan:
     def is_multi_hop(self) -> bool:
         return any(len(route) > 1 for route in self.routes)
 
+    @property
+    def is_split(self) -> bool:
+        """True when some logical link's payload rides more than one path."""
+        return any(len(group) > 1 for group in self.multiroutes)
+
     def route_key(self):
         """Identity of the routing decision (reroute/election counting)."""
+        if self.multiroutes:
+            return (self.kind, self.hub, self.participants, self.routes,
+                    self.multiroutes)
         return (self.kind, self.hub, self.participants, self.routes)
 
 
@@ -743,13 +826,21 @@ class RoutePlanner:
 
     ``hub_failover=True`` re-elects the next-best-connected participant
     (largest total effective bandwidth; ties -> lowest index) as hub while the
-    declared hub is dark, and restores the declared hub on recovery."""
+    declared hub is dark, and restores the declared hub on recovery.
+
+    ``multipath_k > 1`` splits every logical link's payload across up to k
+    edge-disjoint min-cost paths (greedy: take the shortest path, remove its
+    directed edges, repeat), with byte shares proportional to inverse path
+    cost; the plan's ``multiroutes`` carries the split."""
 
     def __init__(self, topo: Topology, *, hub_failover: bool = False,
-                 ref_bytes: int = 1):
+                 ref_bytes: int = 1, multipath_k: int = 1):
         self.topo = topo
         self.hub_failover = bool(hub_failover)
         self.ref_bytes = max(1, int(ref_bytes))
+        if int(multipath_k) < 1:
+            raise ValueError(f"multipath_k must be >= 1, got {multipath_k}")
+        self.multipath_k = int(multipath_k)
 
     # ------------------------------------------------------------ link state
 
@@ -842,6 +933,79 @@ class RoutePlanner:
                 break
         return best
 
+    def _edge_weights(self, eff: np.ndarray, nodes: Sequence[int]):
+        """Per-hop cost dict over `nodes` (dark hops excluded) — the same
+        cost formula `_shortest_paths` uses."""
+        topo = self.topo
+        ref = float(self.ref_bytes)
+        w = {}
+        for a in nodes:
+            for b in nodes:
+                if a != b and eff[a, b] > 0.0:
+                    w[(a, b)] = float(topo.latency_s[a, b]) + ref / eff[a, b]
+        return w
+
+    @staticmethod
+    def _pair_shortest(w, nodes: Sequence[int], src: int, dst: int):
+        """Deterministic min-cost simple path src->dst over the edge set `w`
+        (same relaxation + tie-breaks as `_shortest_paths`); None if
+        unreachable."""
+        best = {src: (0.0, (src,))}
+        edges = sorted(w)
+        for _ in range(max(1, len(nodes))):
+            changed = False
+            for u, v in edges:
+                if u not in best:
+                    continue
+                cu, pu = best[u]
+                if v in pu:                           # simple paths only
+                    continue
+                cand = (cu + w[(u, v)], pu + (v,))
+                cur = best.get(v)
+                if cur is None or _path_better(cand, cur):
+                    best[v] = cand
+                    changed = True
+            if not changed:
+                break
+        return best.get(dst)
+
+    def _k_disjoint_paths(self, eff: np.ndarray, nodes: Sequence[int],
+                          src: int, dst: int, k: int):
+        """Up to k edge-disjoint min-cost paths src->dst (greedy shortest-path
+        removal over DIRECTED edges). Returns [(cost, hop_tuple), ...] in
+        discovery order; at least the primary path when src/dst connect."""
+        w = self._edge_weights(eff, nodes)
+        out = []
+        for _ in range(max(1, int(k))):
+            hit = self._pair_shortest(w, nodes, src, dst)
+            if hit is None:
+                break
+            cost, seq = hit
+            hops = tuple(zip(seq[:-1], seq[1:]))
+            out.append((cost, hops))
+            for hop in hops:
+                del w[hop]
+        return out
+
+    def multiroutes_at(self, eff: np.ndarray, participants: Sequence[int],
+                       logical: Sequence[Tuple[int, int]]):
+        """Per logical link: ((route, share), ...) over up to ``multipath_k``
+        edge-disjoint paths, shares proportional to inverse path cost
+        (normalized to sum to 1). Logical links with a single usable path
+        degrade to ((direct_route, 1.0),)."""
+        groups = []
+        for a, b in logical:
+            paths = self._k_disjoint_paths(eff, participants, a, b,
+                                           self.multipath_k)
+            if not paths:                    # unreachable: direct hop (stalls)
+                groups.append(((((a, b),), 1.0),))
+                continue
+            inv = [1.0 / max(c, 1e-12) for c, _ in paths]
+            tot = sum(inv)
+            groups.append(tuple((hops, iv / tot)
+                                for (c, hops), iv in zip(paths, inv)))
+        return tuple(groups)
+
     def plan_at(self, t: float) -> CommPlan:
         """The routed plan for one collective starting at wall-time t — a pure
         function of t (see class docstring)."""
@@ -872,6 +1036,7 @@ class RoutePlanner:
                     if s != hub:
                         logical.extend([(s, hub), (hub, s)])
 
+        multiroutes = ()
         if fallback:
             routes = tuple(((a, b),) for a, b in logical)
         else:
@@ -885,6 +1050,8 @@ class RoutePlanner:
                     seq = hit[1]
                     routes_list.append(tuple(zip(seq[:-1], seq[1:])))
             routes = tuple(routes_list)
+            if self.multipath_k > 1:
+                multiroutes = self.multiroutes_at(eff, participants, logical)
 
         dyn = topo.dynamics
         valid_until = math.inf
@@ -895,7 +1062,338 @@ class RoutePlanner:
                 valid_until = nxt
         return CommPlan(kind=kind, hub=hub, participants=participants,
                         logical=tuple(logical), routes=routes,
-                        valid_from=float(t), valid_until=float(valid_until))
+                        valid_from=float(t), valid_until=float(valid_until),
+                        multiroutes=multiroutes)
+
+
+# ---------------------------------------------------------------------------
+# fair-share bandwidth scheduling (max-min water-filling over shared links)
+# ---------------------------------------------------------------------------
+
+
+def maxmin_rates(flow_links: Sequence[Dict[Tuple[int, int], float]],
+                 caps: Dict[Tuple[int, int], float],
+                 eps: float = 1e-12) -> List[float]:
+    """Max-min fair progress rates for concurrent flows over shared links,
+    by progressive water-filling.
+
+    ``flow_links[f]`` maps each directed link flow f uses to its WEIGHT: the
+    busy-seconds the flow puts on that link per unit of flow progress (the
+    bottleneck link of a flow has weight 1, every other link <= 1).
+    ``caps[l]`` is link l's current capacity factor (1.0 nominal, 0.0 dark).
+
+    All flows' rates rise together until some link saturates
+    (sum_f weight * rate = cap); flows crossing a saturated link freeze at
+    the water level, the rest keep rising. The result is feasible (per-link
+    weighted sum <= cap) and max-min optimal (every flow with positive rate
+    is bottlenecked at a saturated link). Flows crossing a dark link get 0.
+    """
+    n = len(flow_links)
+    rates = [0.0] * n
+    active = set()
+    for f in range(n):
+        links = {l: w for l, w in flow_links[f].items() if w > 0.0}
+        if links and all(caps.get(l, 1.0) > 0.0 for l in links):
+            active.add(f)
+    rem = {l: float(c) for l, c in caps.items()}
+    for _ in range(n + 1):
+        if not active:
+            break
+        wsum: Dict[Tuple[int, int], float] = {}
+        for f in active:
+            for l, w in flow_links[f].items():
+                if w > 0.0:
+                    wsum[l] = wsum.get(l, 0.0) + w
+        delta = min(rem.get(l, math.inf) / s for l, s in wsum.items())
+        delta = max(delta, 0.0)
+        for f in active:
+            rates[f] += delta
+        sat = set()
+        for l, s in wsum.items():
+            left = rem.get(l, math.inf) - delta * s
+            rem[l] = left
+            if left <= eps * max(1.0, caps.get(l, 1.0)):
+                sat.add(l)
+        frozen = {f for f in active
+                  if any(l in sat for l, w in flow_links[f].items()
+                         if w > 0.0)}
+        if not frozen:          # numerical corner: stop raising the level
+            break
+        active -= frozen
+    return rates
+
+
+@dataclasses.dataclass
+class FairFlow:
+    """One in-flight collective inside `FairShareSim` (mutable record).
+
+    ``links`` maps each directed physical link to its weight (busy-seconds
+    per unit progress, bottleneck = 1); ``work_*`` are bandwidth-seconds at
+    unit rate; ``lat_left`` counts down the latency phases (the flow serves
+    bytes only once it reaches 0). The ``acc_*``/``cur_*`` matrices carry the
+    per-link accounting split across re-formed plans, exactly like
+    `routed_transfer_time`'s segments."""
+    id: int
+    wire: int
+    start: float
+    jitter: float
+    links: Dict[Tuple[int, int], float]
+    lat: float
+    phases: int
+    work_total: float
+    work_left: float
+    nominal: float
+    lat_left: float
+    in_outage: bool = False
+    retries: int = 0
+    frac_in: float = 1.0
+    acc_sec: Optional[np.ndarray] = None
+    acc_bytes: Optional[np.ndarray] = None
+    cur_sec: Optional[np.ndarray] = None
+    cur_bytes: Optional[np.ndarray] = None
+
+    def clone(self) -> "FairFlow":
+        return dataclasses.replace(
+            self, links=dict(self.links),
+            acc_sec=self.acc_sec.copy(), acc_bytes=self.acc_bytes.copy(),
+            cur_sec=self.cur_sec.copy(), cur_bytes=self.cur_bytes.copy())
+
+    def reform(self, spec: Dict, t: float, topo: Topology) -> None:
+        """Re-form the collective on a fresh plan's links: close the current
+        accounting segment, carry the unserved payload fraction over, and pay
+        the new plan's latency phases again (counted as a retry)."""
+        frac_left = (self.work_left / self.work_total
+                     if self.work_total > 0 else 0.0)
+        self.acc_sec = self.acc_sec + self.cur_sec * (self.frac_in - frac_left)
+        self.acc_bytes = (self.acc_bytes
+                          + self.cur_bytes * (self.frac_in - frac_left))
+        self.frac_in = frac_left
+        self.links = dict(spec["links"])
+        self.lat = float(spec["lat"])
+        self.phases = int(spec["phases"])
+        self.cur_sec = np.asarray(spec["sec"], dtype=np.float64)
+        self.cur_bytes = np.asarray(spec["bytes"], dtype=np.float64)
+        self.work_total = float(spec["work"]) * self.jitter
+        self.work_left = frac_left * self.work_total
+        self.retries += 1
+        self.in_outage = False
+        self.lat_left = self.lat + topo._dyn_latency(
+            list(self.links), t, self.phases)
+
+
+class FairShareSim:
+    """Fluid-flow WAN scheduler: every in-flight collective shares link
+    capacity via max-min water-filling (`maxmin_rates`), advancing bytes
+    between network-change edges, latency expiries, and flow finishes. This
+    subsumes the serial channel queue's `transfer_time`/`routed_transfer_time`
+    integration: outage retries, mid-transfer re-planning, and per-link
+    accounting all happen inside one event loop, but a transfer's completion
+    now depends on who shares its bottleneck links.
+
+    The sim's `advance` is associative over time (advancing to t1 then t2
+    equals advancing straight to t2), so per-step and segment-fused loops see
+    identical trajectories. `project()` computes each flow's finish time
+    assuming no future arrivals (exact until the next `add_flow`, which
+    re-projects everything) using the PURE `reform_fn(t, wire, False)` path
+    so no planner side effects leak out of speculation."""
+
+    _TOL = 1e-9
+
+    def __init__(self, topo: Topology, reform_fn=None, finish_fn=None):
+        self.topo = topo
+        self._reform = reform_fn       # (t, wire, effectful) -> spec | None
+        self._finish = finish_fn       # (flow, finish_time) -> None
+        self.t = 0.0
+        self.flows: List[FairFlow] = []
+
+    # ------------------------------------------------------------- flow entry
+
+    def add_flow(self, fid: int, spec: Dict, start: float, wire: int,
+                 jitter: float) -> FairFlow:
+        topo = self.topo
+        m = topo.num_workers
+        links = dict(spec["links"])
+        lat = float(spec["lat"])
+        phases = int(spec["phases"])
+        work = float(spec["work"]) * float(jitter)
+        flow = FairFlow(
+            id=int(fid), wire=int(wire), start=float(start),
+            jitter=float(jitter), links=links, lat=lat, phases=phases,
+            work_total=work, work_left=work, nominal=float(spec["nominal"]),
+            lat_left=lat + topo._dyn_latency(list(links), start, phases),
+            acc_sec=np.zeros((m, m), dtype=np.float64),
+            acc_bytes=np.zeros((m, m), dtype=np.float64),
+            cur_sec=np.asarray(spec["sec"], dtype=np.float64),
+            cur_bytes=np.asarray(spec["bytes"], dtype=np.float64))
+        self.flows.append(flow)
+        return flow
+
+    # ------------------------------------------------------------ advancement
+
+    def advance(self, to: float) -> None:
+        """Advance real sim state to wall-time `to`, finalizing flows that
+        finish on the way (engine accounting via `finish_fn`)."""
+        self.t = self._run(self.flows, self.t, to, effectful=True,
+                           finishes=None)
+
+    def project(self) -> Dict[int, Tuple[float, float]]:
+        """{flow_id: (start, finish)} for every in-flight flow, assuming no
+        future arrivals. Pure: runs on clones with the speculative plan
+        path."""
+        finishes: Dict[int, Tuple[float, float]] = {}
+        flows = [f.clone() for f in self.flows]
+        self._run(flows, self.t, math.inf, effectful=False, finishes=finishes)
+        return finishes
+
+    def _run(self, flows: List[FairFlow], t: float, to: float,
+             effectful: bool, finishes) -> float:
+        topo = self.topo
+        dyn = topo.dynamics
+        for _ in range(1_000_000):
+            if not flows:
+                return to if math.isfinite(to) else t
+            # finalize BEFORE the `to` gate: a flow whose work hits zero
+            # exactly at `to` (diloco blocks until the projected finish, then
+            # advances exactly there) must not stay pending forever — and a
+            # finish always wins over a simultaneous outage edge
+            done_now = [f for f in flows
+                        if f.lat_left <= 0.0 and not f.in_outage
+                        and f.work_left <= self._work_tol(f)]
+            if done_now:
+                for flow in done_now:
+                    flows.remove(flow)
+                    if finishes is not None:
+                        finishes[flow.id] = (flow.start, t)
+                    if effectful and self._finish is not None:
+                        self._finish(flow, t)
+                continue
+            if t >= to:
+                return t
+            links_all = self._link_union(flows)
+            caps = self._caps(links_all, t)
+            changed = False
+            for flow in flows:
+                if flow.lat_left > 0.0:
+                    continue
+                dark = any(caps[l] <= 0.0 for l in flow.links)
+                if dark:
+                    flow.in_outage = True
+                    spec = (self._reform(t, flow.wire, effectful)
+                            if self._reform is not None else None)
+                    if spec is not None and dict(spec["links"]) != flow.links:
+                        # current links dark and the planner routes
+                        # differently: re-form on the fresh routes
+                        flow.reform(spec, t, topo)
+                        changed = True
+                elif flow.in_outage:        # recovered on the SAME links
+                    flow.in_outage = False
+                    flow.retries += 1
+                    if dyn is not None and dyn.retry_latency:
+                        flow.lat_left = flow.lat + topo._dyn_latency(
+                            list(flow.links), t, flow.phases)
+            if changed:                     # link sets moved: fresh capacities
+                links_all = self._link_union(flows)
+                caps = self._caps(links_all, t)
+            serving = [f for f in flows
+                       if f.lat_left <= 0.0 and not f.in_outage]
+            rates = maxmin_rates([f.links for f in serving], caps)
+            nxt = to
+            if dyn is not None and links_all:
+                change = dyn.next_change(links_all, t)
+                if change is not None:
+                    nxt = min(nxt, change)
+            stuck = False
+            for flow in flows:
+                if flow.lat_left > 0.0:
+                    if t + flow.lat_left <= t:    # float residue below one
+                        flow.lat_left = 0.0       # ulp of t: expire in place
+                        stuck = True
+                    else:
+                        nxt = min(nxt, t + flow.lat_left)
+            for flow, x in zip(serving, rates):
+                if x > 0.0:
+                    if t + flow.work_left / x <= t:
+                        flow.work_left = 0.0      # finalized next iteration
+                        stuck = True
+                    else:
+                        nxt = min(nxt, t + flow.work_left / x)
+            if stuck:
+                continue
+            if math.isinf(nxt):
+                raise RuntimeError(
+                    f"fair-share transfer hit a permanent outage at {t:.3f}s "
+                    f"(no future dynamics change)")
+            dt = nxt - t
+            if dt > 0.0:
+                for flow in flows:
+                    if flow.lat_left > 0.0:
+                        flow.lat_left = max(0.0, flow.lat_left - dt)
+                for flow, x in zip(serving, rates):
+                    if x > 0.0:
+                        flow.work_left = max(0.0, flow.work_left - x * dt)
+            t = nxt
+        raise RuntimeError("fair-share advance did not converge "
+                           "(pathological dynamics spec)")
+
+    def _link_union(self, flows: List[FairFlow]):
+        seen = set()
+        out: List[Tuple[int, int]] = []
+        for flow in flows:
+            for l in flow.links:
+                if l not in seen:
+                    seen.add(l)
+                    out.append(l)
+        return out
+
+    def _caps(self, links, t: float) -> Dict[Tuple[int, int], float]:
+        dyn = self.topo.dynamics
+        if dyn is None:
+            return {l: 1.0 for l in links}
+        return {l: dyn.bw_factor(l[0], l[1], t) for l in links}
+
+    @classmethod
+    def _work_tol(cls, flow: FairFlow) -> float:
+        return cls._TOL * max(1.0, flow.work_total)
+
+    # ---------------------------------------------------------- serialization
+
+    def state_dict(self) -> Dict:
+        return {
+            "t": float(self.t),
+            "flows": [{
+                "id": int(f.id), "wire": int(f.wire), "start": float(f.start),
+                "jitter": float(f.jitter), "lat": float(f.lat),
+                "phases": int(f.phases), "work_total": float(f.work_total),
+                "work_left": float(f.work_left), "nominal": float(f.nominal),
+                "lat_left": float(f.lat_left), "in_outage": bool(f.in_outage),
+                "retries": int(f.retries), "frac_in": float(f.frac_in),
+                "links": [[int(i), int(j), float(u)]
+                          for (i, j), u in sorted(f.links.items())],
+                "acc_sec": f.acc_sec, "acc_bytes": f.acc_bytes,
+                "cur_sec": f.cur_sec, "cur_bytes": f.cur_bytes,
+            } for f in self.flows],
+        }
+
+    def load_state(self, st: Dict) -> None:
+        self.t = float(st["t"])
+        self.flows = []
+        for row in st["flows"]:
+            self.flows.append(FairFlow(
+                id=int(row["id"]), wire=int(row["wire"]),
+                start=float(row["start"]), jitter=float(row["jitter"]),
+                links={(int(i), int(j)): float(u)
+                       for i, j, u in row["links"]},
+                lat=float(row["lat"]), phases=int(row["phases"]),
+                work_total=float(row["work_total"]),
+                work_left=float(row["work_left"]),
+                nominal=float(row["nominal"]),
+                lat_left=float(row["lat_left"]),
+                in_outage=bool(row["in_outage"]),
+                retries=int(row["retries"]), frac_in=float(row["frac_in"]),
+                acc_sec=np.asarray(row["acc_sec"], dtype=np.float64),
+                acc_bytes=np.asarray(row["acc_bytes"], dtype=np.float64),
+                cur_sec=np.asarray(row["cur_sec"], dtype=np.float64),
+                cur_bytes=np.asarray(row["cur_bytes"], dtype=np.float64)))
 
 
 # ---------------------------------------------------------------------------

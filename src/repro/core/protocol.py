@@ -66,7 +66,8 @@ from repro.core import adaptive as adaptive_lib
 from repro.core import engine_state as es
 from repro.core.fragments import Fragmenter
 from repro.core.methods import get_method
-from repro.core.network import CommPlan, RoutePlanner, Topology, as_topology
+from repro.core.network import (CommPlan, FairShareSim, RoutePlanner, Topology,
+                                as_topology)
 
 # Host-scheduler checkpoint schema. One upgrade path
 # (`upgrade_scheduler_state`) replaces the `.get(...)`-default sprawl that
@@ -77,12 +78,17 @@ from repro.core.network import CommPlan, RoutePlanner, Topology, as_topology
 #   v4 (PR 5) — + explicit schema_version stamp
 #   v5 (PR 6) — + wire_bytes_raw (uncompressed payload tally for the
 #               wire-codec compression ratio)
-SCHEDULER_SCHEMA_VERSION = 5
+#   v6 (PR 7) — + fair-share traffic plane: 8-element pending rows (wire
+#               bytes + transfer id), per-transfer sojourn log, in-flight
+#               fair-share flow set, per-sample bytes in the resync window,
+#               multipath split counter
+SCHEDULER_SCHEMA_VERSION = 6
 
 _ROUTING_DEFAULTS = {"plan_time": -1.0, "counted_time": -1.0, "plan_dark": [],
                      "reroutes": 0, "hub_elections": 0}
 # N/h None = "keep the engine-derived cadence" (pre-routing checkpoints)
-_RESYNC_DEFAULTS = {"measured": [], "N": None, "h_cocodc": None}
+_RESYNC_DEFAULTS = {"measured": [], "measured_bytes": [], "N": None,
+                    "h_cocodc": None}
 
 
 def upgrade_scheduler_state(st: Dict[str, object]) -> Dict[str, object]:
@@ -97,8 +103,18 @@ def upgrade_scheduler_state(st: Dict[str, object]) -> Dict[str, object]:
     st.setdefault("stall_seconds", 0.0)
     st.setdefault("n_retries", 0)
     # v2 -> v3: pre-routing checkpoints have no planner/resync state and
-    # 5-element pending rows (no measured duration)
-    st["pending"] = [list(r)[:6] + [0.0] * (6 - len(r)) for r in st["pending"]]
+    # 5-element pending rows (no measured duration); v5 -> v6 extends the
+    # rows with wire bytes (0 = unknown, excluded from the Eq. 9 byte fit)
+    # and the transfer id (-1 = predates the transfer log)
+    rows = []
+    for r in st["pending"]:
+        row = list(r)[:8] + [0.0] * (6 - len(r))
+        if len(row) < 7:
+            row.append(0)
+        if len(row) < 8:
+            row.append(-1)
+        rows.append(row)
+    st["pending"] = rows
     routing = dict(st.get("routing") or {})
     for k, v in _ROUTING_DEFAULTS.items():
         routing.setdefault(k, v)
@@ -106,14 +122,31 @@ def upgrade_scheduler_state(st: Dict[str, object]) -> Dict[str, object]:
     resync = dict(st.get("resync") or {})
     for k, v in _RESYNC_DEFAULTS.items():
         resync.setdefault(k, v)
+    # pre-v6 windows carry durations without payload sizes; pad with zeros so
+    # the decomposed fit skips them instead of mispairing
+    if len(resync["measured_bytes"]) != len(resync["measured"]):
+        resync["measured_bytes"] = [0.0] * len(resync["measured"])
     st["resync"] = resync
     # v4 -> v5: pre-codec checkpoints never tracked the raw (uncompressed)
     # payload tally; defaulting it to bytes_sent resumes with ratio 1.0 and
     # lets the tally diverge from there
     st.setdefault("wire_bytes_raw", st["bytes_sent"])
+    # v5 -> v6: fair-share traffic plane (serial checkpoints carry no flow
+    # set; the sojourn log starts empty and fills from resume onward)
+    st.setdefault("multipath_splits", 0)
+    st.setdefault("transfer_log", [])
+    st.setdefault("fairshare", None)
     # stamp the version
     st["schema_version"] = SCHEDULER_SCHEMA_VERSION
     return st
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending list (0.0 on empty)."""
+    n = len(sorted_vals)
+    if n == 0:
+        return 0.0
+    return float(sorted_vals[min(n - 1, max(0, math.ceil(q * n) - 1))])
 
 
 @dataclasses.dataclass
@@ -127,6 +160,9 @@ class PendingSync:
     seq: int               # initiation order (stable delivery tie-break)
     duration: float = 0.0  # measured transfer seconds (finish - channel start;
                            # queueing excluded) — the Eq. 9 re-derivation input
+    wire: int = 0          # wire bytes of this transfer (the Eq. 9 byte-fit
+                           # pairs with duration; 0 = pre-v6 checkpoint)
+    tid: int = -1          # transfer id (fair-share flow id / sojourn-log key)
 
 
 class ProtocolEngine:
@@ -186,11 +222,22 @@ class ProtocolEngine:
                              f"(options: static, routed)")
         if ccfg.hub_failover and ccfg.routing != "routed":
             raise ValueError("hub_failover requires routing='routed'")
+        if ccfg.channel_scheduler not in ("serial", "fairshare"):
+            raise ValueError(
+                f"unknown channel_scheduler {ccfg.channel_scheduler!r} "
+                f"(options: serial, fairshare)")
+        if ccfg.multipath_k < 1:
+            raise ValueError(f"multipath_k must be >= 1, "
+                             f"got {ccfg.multipath_k}")
+        if ccfg.multipath_k > 1 and ccfg.routing != "routed":
+            raise ValueError("multipath_k > 1 requires routing='routed' "
+                             "(k-path splitting needs the route planner)")
         self._planner: "RoutePlanner | None" = None
         if ccfg.routing == "routed":
             self._planner = RoutePlanner(
                 self.topology, hub_failover=ccfg.hub_failover,
-                ref_bytes=self._wire_bytes(int(mean_frag_bytes)))
+                ref_bytes=self._wire_bytes(int(mean_frag_bytes)),
+                multipath_k=ccfg.multipath_k)
         self._plan: "CommPlan | None" = None
         self._plan_time: "float | None" = None
         # regions the PLANNER took offline -> the availability the USER had
@@ -218,7 +265,8 @@ class ProtocolEngine:
         self.bytes_sent = 0
         self.wire_bytes_raw = 0      # uncompressed (f32) payload tally
         self.n_syncs = 0
-        self._channel_free = [0.0] * max(1, self.topology.concurrent_collectives)
+        # >= 1 is validated at Topology construction — no silent rewrite here
+        self._channel_free = [0.0] * self.topology.concurrent_collectives
         m = self.M
         self.link_bytes = np.zeros((m, m), dtype=np.float64)
         self.link_seconds = np.zeros((m, m), dtype=np.float64)
@@ -226,6 +274,21 @@ class ProtocolEngine:
         self._dyn_seq = 0            # per-transfer jitter draw counter
         self.stall_seconds = 0.0     # time lost vs nominal static transfer cost
         self.n_retries = 0           # outage-interrupted collective restarts
+        # fair-share traffic plane: in-flight flows share link capacity via
+        # max-min water-filling instead of queueing on channels
+        self._fairshare: "FairShareSim | None" = None
+        if ccfg.channel_scheduler == "fairshare":
+            self._fairshare = FairShareSim(self.topology,
+                                           reform_fn=self._fs_reform,
+                                           finish_fn=self._fs_finish)
+        # per-transfer sojourn (initiation -> finish wall seconds, queueing
+        # INCLUDED) keyed by transfer id; fair-share entries hold the current
+        # projection until the flow finalizes
+        self._transfer_log: Dict[int, float] = {}
+        self.multipath_splits = 0    # transfers whose plan split a payload
+        # Eq. 9 latency/bandwidth decomposition anchors
+        self._ref_wire_bytes = self._wire_bytes(int(mean_frag_bytes))
+        self._lat_startup = self.topology.allreduce_time(0)
 
     # ------------------------------------------------------------ properties
 
@@ -367,8 +430,20 @@ class ProtocolEngine:
         bottleneck bandwidth (and the engine-owned `_dyn_seq` counter makes
         per-transfer jitter a pure function of serialized state). With
         routing enabled the collective executes over the ACTIVE CommPlan's
-        multi-hop routes and participants instead of the fixed formulas."""
+        multi-hop routes and participants instead of the fixed formulas.
+
+        With `channel_scheduler="fairshare"` there is no channel queue at all:
+        the transfer joins the fair-share flow set immediately and its finish
+        time is the max-min water-filling projection over everyone sharing
+        its links (re-projected whenever a later transfer arrives)."""
         wire = self._wire_bytes(nbytes)
+        tid = self.n_syncs              # unique, monotonic transfer id
+        if self._fairshare is not None:
+            finish, duration = self._fairshare_schedule(tid, wire)
+            self.bytes_sent += wire
+            self.wire_bytes_raw += int(nbytes)
+            self.n_syncs += 1
+            return finish, duration
         ch = min(range(len(self._channel_free)),
                  key=lambda i: self._channel_free[i])
         start = max(self.wall_clock, self._channel_free[ch])
@@ -401,6 +476,8 @@ class ProtocolEngine:
                     seg_plan, wire) * (scale * frac)
                 self.link_bytes += self.topology.plan_link_bytes(
                     seg_plan, wire) * frac
+            if any(seg_plan.is_split for seg_plan, _ in segments):
+                self.multipath_splits += 1
         elif dyn is None:
             t_s = self.topology.t_s(wire)
             finish = start + t_s
@@ -425,7 +502,97 @@ class ProtocolEngine:
         self.bytes_sent += wire
         self.wire_bytes_raw += int(nbytes)
         self.n_syncs += 1
+        # sojourn = initiation -> finish, queueing INCLUDED (unlike duration)
+        self._transfer_log[tid] = finish - self.wall_clock
         return finish, finish - start
+
+    # ------------------------------------------------- fair-share scheduling
+
+    def _fairshare_schedule(self, tid: int, wire: int) -> Tuple[float, float]:
+        """Admit one collective into the fair-share flow set at the current
+        wall-clock and re-project every in-flight transfer's finish time
+        (arrivals only ever slow others down, so deliveries already made stay
+        consistent). Returns ``(projected_finish, projected_duration)``."""
+        sim = self._fairshare
+        request = self.wall_clock
+        sim.advance(request)
+        spec = self._fs_flow_spec(request, wire, effectful=True)
+        dyn = self.topology.dynamics
+        jitter = 1.0
+        if dyn is not None:
+            jitter = dyn.jitter_mult(self._dyn_seq)
+            self._dyn_seq += 1
+        if spec["multipath"]:
+            self.multipath_splits += 1
+        sim.add_flow(tid, spec, request, wire, jitter)
+        finishes = sim.project()
+        by_tid = {ev.tid: ev for ev in self.pending}
+        for fid, (fstart, ffinish) in finishes.items():
+            self._transfer_log[fid] = ffinish - fstart
+            ev = by_tid.get(fid)
+            if ev is not None:
+                ev.finish_time = ffinish
+                ev.duration = ffinish - fstart
+                ev.deliver_at = self._deliver_step_for(ev.t_init, ffinish)
+        _, finish = finishes[tid]
+        return finish, finish - request
+
+    def _fs_flow_spec(self, t: float, wire: int, effectful: bool) -> Dict:
+        """Fair-share flow description of one collective at wall-time t: link
+        weights (busy-seconds per unit progress; bottleneck = 1), latency
+        phases, unit-rate bandwidth work, and the accounting matrices. Routed
+        engines derive it from the plan at t (`effectful=False` uses the pure
+        `plan_at` so projections leak no planner side effects)."""
+        topo = self.topology
+        if self._planner is not None:
+            plan = (self._transfer_plan_fn(t) if effectful
+                    else self._planner.plan_at(t))
+            return self._fs_pack_spec(
+                topo.plan_link_bw_seconds(plan, wire),
+                topo.plan_allreduce_time(plan, 0),
+                topo.plan_n_latency_phases(plan),
+                topo.plan_allreduce_time(plan, wire),
+                topo.plan_link_seconds(plan, wire),
+                topo.plan_link_bytes(plan, wire),
+                multipath=plan.is_split)
+        return self._fs_pack_spec(
+            topo.link_bw_seconds(wire), topo.allreduce_time(0),
+            topo.n_latency_phases, topo.allreduce_time(wire),
+            topo.link_seconds(wire), topo.link_bytes(wire))
+
+    @staticmethod
+    def _fs_pack_spec(bsec, lat, phases, nominal, sec, link_bytes,
+                      multipath: bool = False) -> Dict:
+        work = float(bsec.max(initial=0.0))
+        links = {}
+        if work > 0.0:
+            for i, j in np.argwhere(bsec > 0.0):
+                links[(int(i), int(j))] = float(bsec[i, j] / work)
+        return {"links": links, "lat": float(lat), "phases": int(phases),
+                "work": work, "nominal": float(nominal), "sec": sec,
+                "bytes": link_bytes, "multipath": bool(multipath)}
+
+    def _fs_reform(self, t: float, wire: int, effectful: bool):
+        """Mid-transfer re-plan hook for the fair-share sim (None on static
+        routing: the flow waits out the outage on its links, like serial)."""
+        if self._planner is None:
+            return None
+        return self._fs_flow_spec(t, wire, effectful)
+
+    def _fs_finish(self, flow, finish: float):
+        """Finalize one fair-share flow's accounting (the serial path's
+        schedule-time accounting, deferred to actual completion): WAN
+        occupancy, stall vs nominal, retries, and the per-link traffic split
+        across the plans that carried the payload."""
+        actual = finish - flow.start
+        self.comm_seconds += actual
+        self.stall_seconds += max(0.0, actual - flow.nominal)
+        self.n_retries += flow.retries
+        scale = actual / flow.nominal if flow.nominal > 0 else 1.0
+        self.link_seconds += (flow.acc_sec
+                              + flow.cur_sec * flow.frac_in) * scale
+        self.link_bytes += flow.acc_bytes + flow.cur_bytes * flow.frac_in
+        self._transfer_log[flow.id] = actual
 
     def _deliver_step_for(self, t: int, finish_time: float) -> int:
         """First step whose end-of-step wall-clock covers `finish_time`
@@ -438,11 +605,14 @@ class ProtocolEngine:
     # ------------------------------------------------------------ initiation
 
     def _initiate(self, t: int, params_stack, p: int):
-        finish, duration = self._schedule_transfer(self.frag.fragment_bytes(p))
+        nbytes = self.frag.fragment_bytes(p)
+        tid = self.n_syncs              # _schedule_transfer's id, pre-bump
+        finish, duration = self._schedule_transfer(nbytes)
         self.state = self._fns.initiate(self.state, t, params_stack, p)
         self.pending.append(PendingSync(
             frag=p, t_init=t, deliver_at=self._deliver_step_for(t, finish),
-            finish_time=finish, seq=self._seq, duration=duration))
+            finish_time=finish, seq=self._seq, duration=duration,
+            wire=self._wire_bytes(nbytes), tid=tid))
         self._seq += 1
 
     def _select_cocodc(self, t: int, busy: set) -> int:
@@ -480,7 +650,13 @@ class ProtocolEngine:
         delivery processing + initiation, or nothing). Returns the updated
         params_stack."""
         self.wall_clock += self.topology.t_c
-        return self.method_impl.on_step_end(self, t, params_stack)
+        out = self.method_impl.on_step_end(self, t, params_stack)
+        if self._fairshare is not None:
+            # advance the fluid sim to the post-step wall-clock, finalizing
+            # flows that finished (advance is associative, so per-step and
+            # segment-fused loops land on identical sim states)
+            self._fairshare.advance(self.wall_clock)
+        return out
 
     def _process_deliveries(self, t: int, params_stack):
         """Apply every in-flight delivery due at step t (delivery order:
@@ -494,7 +670,8 @@ class ProtocolEngine:
             self.pending.remove(ev)
             if self._resync is not None:
                 # a COMPLETED transfer's measured duration is shared history
-                self._resync.observe(ev.duration)
+                # (paired with its wire bytes for the Eq. 9 byte fit)
+                self._resync.observe(ev.duration, ev.wire)
         return params_stack
 
     # ---------------------------------------------------------- checkpointing
@@ -507,7 +684,8 @@ class ProtocolEngine:
         return {
             "schema_version": SCHEDULER_SCHEMA_VERSION,
             "pending": [[ev.frag, ev.t_init, ev.deliver_at, ev.finish_time,
-                         ev.seq, ev.duration] for ev in self.pending],
+                         ev.seq, ev.duration, ev.wire, ev.tid]
+                        for ev in self.pending],
             "seq": self._seq,
             "comm_seconds": self.comm_seconds,
             "bytes_sent": self.bytes_sent,
@@ -539,9 +717,19 @@ class ProtocolEngine:
             "resync": {
                 "measured": ([] if self._resync is None
                              else [float(x) for x in self._resync.measured]),
+                "measured_bytes": ([] if self._resync is None else
+                                   [float(x)
+                                    for x in self._resync.measured_bytes]),
                 "N": int(self.N),
                 "h_cocodc": int(self.h_cocodc),
             },
+            # fair-share traffic plane: the in-flight flow set (None under the
+            # serial scheduler) + the per-transfer sojourn log
+            "multipath_splits": int(self.multipath_splits),
+            "transfer_log": [[int(k), float(v)] for k, v
+                             in sorted(self._transfer_log.items())],
+            "fairshare": (None if self._fairshare is None
+                          else self._fairshare.state_dict()),
         }
 
     def restore_scheduler(self, st: Dict[str, object]):
@@ -552,7 +740,8 @@ class ProtocolEngine:
         self.pending = [PendingSync(frag=int(r[0]), t_init=int(r[1]),
                                     deliver_at=int(r[2]),
                                     finish_time=float(r[3]), seq=int(r[4]),
-                                    duration=float(r[5]))
+                                    duration=float(r[5]), wire=int(r[6]),
+                                    tid=int(r[7]))
                         for r in st["pending"]]
         self._seq = int(st["seq"])
         self.comm_seconds = float(st["comm_seconds"])
@@ -595,14 +784,21 @@ class ProtocolEngine:
         resync = st["resync"]
         if self._resync is not None:
             self._resync.measured = [float(x) for x in resync["measured"]]
+            self._resync.measured_bytes = [float(x) for x
+                                           in resync["measured_bytes"]]
         if resync["N"] is not None:
             self.N = int(resync["N"])
         if resync["h_cocodc"] is not None:
             self.h_cocodc = int(resync["h_cocodc"])
+        self.multipath_splits = int(st["multipath_splits"])
+        self._transfer_log = {int(k): float(v) for k, v in st["transfer_log"]}
+        if self._fairshare is not None and st["fairshare"] is not None:
+            self._fairshare.load_state(st["fairshare"])
 
     # ---------------------------------------------------------------- stats
 
     def stats(self) -> Dict[str, float]:
+        sojourns = sorted(self._transfer_log.values())
         return {
             "wall_clock_s": float(self.wall_clock),
             "comm_seconds": float(self.comm_seconds),
@@ -627,6 +823,16 @@ class ProtocolEngine:
             "n_retries": float(self.n_retries),
             "reroutes": float(self.reroutes),
             "hub_elections": float(self.hub_elections),
+            # per-transfer sojourn (initiation -> finish, queueing INCLUDED —
+            # the scheduler-comparison metric; `mean_transfer_s` above keeps
+            # its queueing-excluded occupancy semantics)
+            "transfer_mean_s": float(np.mean(sojourns)) if sojourns else 0.0,
+            "transfer_p50_s": _percentile(sojourns, 0.50),
+            "transfer_p95_s": _percentile(sojourns, 0.95),
+            "multipath_splits": float(self.multipath_splits),
+            "max_link_busy_fraction": float(
+                0.0 if self.wall_clock <= 0
+                else self.link_seconds.max(initial=0.0) / self.wall_clock),
         }
 
     def link_stats(self) -> Dict[str, object]:
@@ -634,12 +840,20 @@ class ProtocolEngine:
         regions = self.topology.regions
         links = {}
         m = self.M
+        wall = float(self.wall_clock)
         for i in range(m):
             for j in range(m):
                 if self.link_bytes[i, j] > 0:
+                    # busy-seconds accrue PER FLOW (occupancy scaled by
+                    # actual/nominal duration), so under fairshare a link
+                    # shared by concurrent flows can exceed 1.0 — read it
+                    # as demand on the link, like a load average
                     links[f"{regions[i]}->{regions[j]}"] = {
                         "bytes": float(self.link_bytes[i, j]),
                         "busy_seconds": float(self.link_seconds[i, j]),
+                        "busy_fraction": float(
+                            0.0 if wall <= 0
+                            else self.link_seconds[i, j] / wall),
                     }
         busiest = None
         if links:

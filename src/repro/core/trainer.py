@@ -101,7 +101,9 @@ CKPT_FORMAT = "trainer_state_v1"
 #     resume validation for spec-built trainers)
 #   v3 (PR 6) — + wire-codec trajectory knobs (wire_codec, codec_block,
 #     codec_error_feedback); pre-codec checkpoints upgrade to "none"
-META_SCHEMA_VERSION = 3
+#   v4 (PR 7) — + traffic-plane knobs (channel_scheduler, multipath_k);
+#     pre-fairshare checkpoints upgrade to the serial channel queue
+META_SCHEMA_VERSION = 4
 
 
 @functools.lru_cache(maxsize=None)
@@ -438,7 +440,9 @@ class CrossRegionTrainer:
                 "routing": c.routing, "hub_failover": c.hub_failover,
                 "adaptive_resync": c.adaptive_resync,
                 "wire_codec": c.wire_codec, "codec_block": c.codec_block,
-                "codec_error_feedback": c.codec_error_feedback}
+                "codec_error_feedback": c.codec_error_feedback,
+                "channel_scheduler": c.channel_scheduler,
+                "multipath_k": c.multipath_k}
 
     def _upgrade_meta(self, meta: Dict[str, Any]) -> Dict[str, Any]:
         """Single upgrade path for checkpoint meta of any prior schema
@@ -460,6 +464,9 @@ class CrossRegionTrainer:
         meta.setdefault("wire_codec", "none")
         meta.setdefault("codec_block", 256)
         meta.setdefault("codec_error_feedback", True)
+        # pre-PR7 checkpoints predate the traffic plane: serial channel queue
+        meta.setdefault("channel_scheduler", "serial")
+        meta.setdefault("multipath_k", 1)
         meta["schema_version"] = META_SCHEMA_VERSION
         return meta
 

@@ -57,7 +57,10 @@ def spec_from_args(args) -> ExperimentSpec:
     network = over(spec.network, topology=args.topology, mesh=args.mesh,
                    mesh_seed=args.mesh_seed, dynamics=args.dynamics,
                    step_time_s=args.step_time, routing=args.routing,
-                   hub_failover=args.hub_failover)
+                   hub_failover=args.hub_failover,
+                   channel_scheduler=args.channel_scheduler,
+                   multipath_k=args.multipath_k,
+                   concurrent_collectives=args.concurrent_collectives)
     run = over(spec.run, steps=args.steps, seed=args.seed, inner_lr=args.lr,
                local_batch=args.local_batch, seq_len=args.seq_len,
                eval_every=args.eval_every, ckpt_every=args.ckpt_every,
@@ -139,6 +142,19 @@ def make_parser() -> argparse.ArgumentParser:
                          "connected region as hub while the declared hub's "
                          "links are out (restored on recovery); fully dark "
                          "regions drop out of the collective")
+    ap.add_argument("--channel-scheduler", default=None,
+                    choices=["serial", "fairshare"],
+                    help="WAN traffic plane: serial = fixed channel queue "
+                         "(bitwise-pinned default); fairshare = max-min "
+                         "water-filling bandwidth sharing over all in-flight "
+                         "transfers (links as shared resources)")
+    ap.add_argument("--multipath-k", default=None, type=int,
+                    help="with --routing routed: split each logical link's "
+                         "payload across up to k edge-disjoint min-cost "
+                         "paths (inverse-cost byte shares; default 1)")
+    ap.add_argument("--concurrent-collectives", default=None, type=int,
+                    help="serial scheduler's WAN channel pool size "
+                         "(explicit topologies/meshes only; default 1)")
     ap.add_argument("--adaptive-resync", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="re-derive Eq. 9's target sync count N (and Eq. "
@@ -228,11 +244,18 @@ def main(argv=None):
     if spec.network.routing == "routed":
         print(f"routed planner: {int(stats['reroutes'])} reroutes, "
               f"{int(stats['hub_elections'])} hub elections", flush=True)
+    if spec.network.channel_scheduler == "fairshare" or \
+            spec.network.multipath_k > 1:
+        print(f"traffic plane ({spec.network.channel_scheduler}): transfer "
+              f"sojourn mean {stats['transfer_mean_s']:.2f}s "
+              f"p95 {stats['transfer_p95_s']:.2f}s, "
+              f"{int(stats['multipath_splits'])} multipath splits", flush=True)
     if link_stats["links"]:
         print("per-link WAN traffic:", flush=True)
         for link, rec in sorted(link_stats["links"].items()):
             print(f"  {link:32s} {rec['bytes']/1e9:9.3f} GB "
-                  f"busy {rec['busy_seconds']:8.1f}s", flush=True)
+                  f"busy {rec['busy_seconds']:8.1f}s "
+                  f"({rec['busy_fraction']*100:4.1f}%)", flush=True)
         print(f"  busiest link: {link_stats['busiest_link']}", flush=True)
     if args.ckpt:
         trainer.save_checkpoint(args.ckpt)

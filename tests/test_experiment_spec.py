@@ -306,11 +306,15 @@ def test_upgrade_scheduler_state_from_v1():
           "link_bytes": np.zeros((2, 2)), "link_seconds": np.zeros((2, 2))}
     up = upgrade_scheduler_state(v1)
     assert up["schema_version"] == SCHEDULER_SCHEMA_VERSION
-    assert up["pending"] == [[0, 1, 3, 4.0, 0, 0.0]]    # duration appended
+    # duration, wire, and transfer id appended (unknown wire = 0, tid = -1)
+    assert up["pending"] == [[0, 1, 3, 4.0, 0, 0.0, 0, -1]]
     assert up["dyn_seq"] == 0 and up["n_retries"] == 0
     assert up["routing"]["plan_time"] == -1.0
     assert up["routing"]["plan_dark"] == []
     assert up["resync"]["N"] is None                    # keep engine-derived
+    assert up["resync"]["measured_bytes"] == []
+    assert up["multipath_splits"] == 0 and up["transfer_log"] == []
+    assert up["fairshare"] is None
     # current-version state passes through unchanged
     v4 = dict(up, dyn_seq=7, routing=dict(up["routing"], reroutes=2))
     up2 = upgrade_scheduler_state(v4)

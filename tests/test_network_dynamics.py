@@ -433,20 +433,13 @@ def test_dynamic_mid_transfer_kill_and_resume(tmp_path):
 
 
 def test_sweep_validate_payload_catches_drift():
-    from benchmarks.sweep import validate_payload
+    from benchmarks.sweep import STATS_KEYS, validate_payload
     ok = {"scenario": {"dynamics": None}, "steps": 8, "target_ppl": 30.0,
           "runs": {"cocodc": {
               "final_ppl": 25.0, "final_nll": 3.2, "steps_to_target": 8,
               "host_s": 1.0, "history": [{"step": 8, "nll": 3.2}],
-              "stats": {k: 1.0 for k in
-                        ("wall_clock_s", "comm_seconds", "bytes_sent",
-                         "n_syncs", "overlap_ratio", "stall_seconds",
-                         "stall_fraction", "n_retries", "reroutes",
-                         "hub_elections", "busiest_link_bytes",
-                         "busiest_link_seconds", "wire_bytes_total",
-                         "wire_bytes_raw", "compression_ratio",
-                         "mean_transfer_s")},
-              "link_stats": {"links": {"a->b": {}}}}}}
+              "stats": {k: 1.0 for k in STATS_KEYS},
+              "link_stats": {"links": {"a->b": {"busy_fraction": 0.5}}}}}}
     validate_payload(ok, "ok")                     # no raise
     bad = {**ok, "runs": {"cocodc": {**ok["runs"]["cocodc"],
                                      "final_ppl": float("nan")}}}
@@ -456,6 +449,10 @@ def test_sweep_validate_payload_catches_drift():
         k: v for k, v in ok["runs"]["cocodc"].items() if k != "stats"}}}
     with pytest.raises(AssertionError, match="stats"):
         validate_payload(missing, "missing")
+    nofrac = {**ok, "runs": {"cocodc": {
+        **ok["runs"]["cocodc"], "link_stats": {"links": {"a->b": {}}}}}}
+    with pytest.raises(AssertionError, match="busy_fraction"):
+        validate_payload(nofrac, "nofrac")
 
 
 def test_sweep_bw_autocalibration_is_bandwidth_dominated():
