@@ -106,9 +106,10 @@ def main() -> dict:
     # and writes bits/8 (+ scales); decode is the mirror. ~3 flops/elem keeps
     # both far left of the ridge, so the roofline is the HBM stream.
     from repro.kernels.delta_codec import ops as codec_ops
+    from repro.kernels.delta_codec.ops import CODEC_BITS
     n = 4_000_000
     x = jax.random.normal(jax.random.fold_in(key, 15), (n,))
-    for codec, bits in (("int8", 8), ("int4", 4)):
+    for codec, bits in sorted(CODEC_BITS.items()):
         fe = jax.jit(lambda x, c=codec: codec_ops.encode_array(
             x, codec=c, block=256))
         us = bench(lambda x: fe(x)[0], x)
@@ -122,6 +123,38 @@ def main() -> dict:
              f"decode_us={dus:.0f};tpu_roofline_us={tpu_us:.1f}")
         out[f"delta_codec_{codec}"] = {"cpu_us": us, "decode_cpu_us": dus,
                                        "tpu_us": tpu_us}
+
+    # outer_update: the fused protocol-transition family over the flat
+    # fragment plane. Nesterov streams 3 reads + 2 writes; deliver streams
+    # the worker-stacked fragment (+ snapshot for compensate) in one pass.
+    # Analytic projections come from the SAME registry roofline.py plots.
+    from repro.kernels import stream_kernel_specs
+    from repro.kernels.outer_update import ops as ou_ops
+    specs = {s["kernel"]: s for s in stream_kernel_specs()}
+    rows, M = 4096, 4                  # rows x 1024 = 4.2M elems, 4 workers
+    t, m, d, g = (jax.random.normal(jax.random.fold_in(key, 20 + i),
+                                    (rows, 1024)) for i in range(4))
+    loc = jax.random.normal(jax.random.fold_in(key, 24), (M, rows, 1024))
+    snap = jax.random.normal(jax.random.fold_in(key, 25), (M, rows, 1024))
+    avail = jnp.ones((M,))
+    fn = jax.jit(lambda t, m, d: ou_ops.outer_nesterov(
+        t, m, d, lr=0.7, mu=0.9, impl="ref"))
+    us = bench(lambda *a: fn(*a)[0], t, m, d)
+    sp = specs["outer_update_nesterov"]
+    tpu_us = rows * 1024 * sp["bytes_per_elem"] / HBM_BW * 1e6
+    emit("kernel/outer_nesterov_4M", us, f"tpu_roofline_us={tpu_us:.1f}")
+    out["outer_nesterov"] = {"cpu_us": us, "tpu_us": tpu_us}
+    for mode, args in (("blend", (loc, loc, g)), ("compensate",
+                                                  (loc, snap, g))):
+        fn = jax.jit(lambda l, s, g, md=mode: ou_ops.fused_deliver(
+            l, s, g, avail, mode=md, alpha=0.5, tau=3.0, lam=0.5, H=100.0,
+            impl="ref"))
+        us = bench(fn, *args)
+        sp = specs[f"outer_update_deliver_{mode}"]
+        tpu_us = M * rows * 1024 * sp["bytes_per_elem"] / HBM_BW * 1e6
+        emit(f"kernel/outer_deliver_{mode}_4Mx4", us,
+             f"tpu_roofline_us={tpu_us:.1f}")
+        out[f"outer_deliver_{mode}"] = {"cpu_us": us, "tpu_us": tpu_us}
 
     save_json("kernel_bench", out)
     return out

@@ -90,40 +90,38 @@ def extrapolate(full, p1, p2, units: int):
     return out
 
 
-def codec_roofline() -> "list[dict]":
-    """Analytic roofline placement of the delta-codec kernels: per element the
-    encode path does ~3 flops (abs-max reduce share, scale multiply, round/
-    clip) against 4 B read + bits/8 B written (+ 4 B/block of scales), an
-    arithmetic intensity of ~0.6 flop/B — two orders of magnitude left of the
-    v5e ridge (PEAK_FLOPS/HBM_BW ~ 241 flop/B). The kernels are HBM streams;
-    time-per-byte, not flops, is the budget (benchmarks/kernels.py measures
-    the same thing empirically)."""
-    from repro.kernels.delta_codec.ops import CODEC_BITS
+def stream_roofline() -> "list[dict]":
+    """Analytic roofline placement of the PROTOCOL STREAM kernels — the
+    single-pass engine kernels (delta wire codec encode/decode, the fused
+    outer-update family). Entries come from the ONE registry
+    (`repro.kernels.stream_kernel_specs`), not a hardcoded list, so new
+    stream kernels land here by registering. Every entry sits orders of
+    magnitude left of the v5e ridge (PEAK_FLOPS/HBM_BW ~ 241 flop/B): these
+    kernels are HBM streams; time-per-byte, not flops, is the budget
+    (benchmarks/kernels.py measures the same thing empirically)."""
+    from repro.kernels import stream_kernel_specs
 
     ridge = PEAK_FLOPS / HBM_BW
     rows = []
-    for codec, bits in sorted(CODEC_BITS.items()):
-        block = 256
-        flops_per_elem = 3.0
-        enc_bytes = 4 + bits / 8 + 4 / block        # read f32, write codes+scales
-        dec_bytes = bits / 8 + 4 / block + 4        # read codes+scales, write f32
-        for direction, bpe in (("encode", enc_bytes), ("decode", dec_bytes)):
-            intensity = flops_per_elem / bpe
-            t_mem = bpe / HBM_BW                    # s/elem at the HBM roof
-            t_comp = flops_per_elem / PEAK_FLOPS
-            rows.append({
-                "kernel": f"delta_codec_{codec}_{direction}",
-                "flops_per_elem": flops_per_elem, "bytes_per_elem": bpe,
-                "intensity_flop_per_byte": intensity,
-                "ridge_flop_per_byte": ridge,
-                "bound": "memory" if intensity < ridge else "compute",
-                "roofline_us_per_MB": t_mem / bpe * 1e6 * 1e6,
-            })
-            emit(f"roofline/delta_codec/{codec}/{direction}", 0.0,
-                 f"intensity={intensity:.2f}flop/B;ridge={ridge:.0f}flop/B;"
-                 f"bound=memory;headroom={ridge/intensity:.0f}x;"
-                 f"mem_ns_per_elem={t_mem*1e9:.3f};"
-                 f"compute_ns_per_elem={t_comp*1e9:.5f}")
+    for spec in stream_kernel_specs():
+        flops_per_elem = spec["flops_per_elem"]
+        bpe = spec["bytes_per_elem"]
+        intensity = flops_per_elem / bpe
+        t_mem = bpe / HBM_BW                        # s/elem at the HBM roof
+        t_comp = flops_per_elem / PEAK_FLOPS
+        rows.append({
+            "kernel": spec["kernel"],
+            "flops_per_elem": flops_per_elem, "bytes_per_elem": bpe,
+            "intensity_flop_per_byte": intensity,
+            "ridge_flop_per_byte": ridge,
+            "bound": "memory" if intensity < ridge else "compute",
+            "roofline_us_per_MB": t_mem / bpe * 1e6 * 1e6,
+        })
+        emit(f"roofline/stream/{spec['kernel']}", 0.0,
+             f"intensity={intensity:.2f}flop/B;ridge={ridge:.0f}flop/B;"
+             f"bound={rows[-1]['bound']};headroom={ridge/intensity:.0f}x;"
+             f"mem_ns_per_elem={t_mem*1e9:.3f};"
+             f"compute_ns_per_elem={t_comp*1e9:.5f}")
     return rows
 
 
@@ -191,11 +189,11 @@ def main() -> dict:
              f"collective={t_coll*1e3:.2f}ms;dominant={dominant};"
              f"useful_ratio={ratio:.2f}")
 
-    codec = codec_roofline()
+    stream = stream_roofline()
     save_json("roofline_table", table)
-    save_json("roofline_codec", codec)
+    save_json("roofline_stream", stream)
     _write_markdown(table)
-    return {"table": table, "codec": codec}
+    return {"table": table, "stream": stream}
 
 
 def _recommend(cfg, shape, dominant, ratio) -> str:

@@ -176,6 +176,16 @@ def codec_encode_throughput(codec: str, n: int = 1 << 21,
 # initiate — a blowup here means the codec fell off the fused/jitted path
 CODEC_OVERHEAD_MAX_X = 8.0
 
+# --smoke guard: the flat-plane fused engine replaces the per-leaf tree-map
+# transitions (one dispatch per leaf per stage) with one dispatch per stage.
+# The guard measures CPU ORACLE mode (engine_impl="host": eager, per-dispatch
+# overhead real — the CPU proxy for accelerator kernel-launch count); there
+# the fused deliver must never be SLOWER than the per-leaf path it replaces
+# (both measured best-of-2 to shave scheduler noise). Under jit-on-CPU both
+# paths compile to ONE XLA computation, so that mode is reported for context
+# but can't show a dispatch-count win and is not guarded.
+FUSED_MIN_SPEEDUP = 1.0
+
 
 def main(steps: int = 1000, smoke: bool = False) -> dict:
     out = {}
@@ -246,6 +256,36 @@ def main(steps: int = 1000, smoke: bool = False) -> dict:
         codec_rows[codec] = row
     out["codec_overhead"] = codec_rows
 
+    # fused outer-update plane: per-step coordinator overhead of the
+    # flat-plane engine (fused_updates=on — state already flat, ONE fused
+    # Nesterov + ONE fused deliver dispatch per transition) vs the per-leaf
+    # tree-map path it replaces, same protocol schedule. The guarded
+    # comparison runs the CPU oracle in EAGER mode ("host"), where each
+    # tree-map leaf is a real dispatch — the CPU stand-in for accelerator
+    # kernel-launch count. The jit numbers are context only: XLA fuses the
+    # whole per-leaf transition into one computation there, so the flat
+    # plane's remaining pack/unpack of the worker stack reads as overhead.
+    fused_rows = {}
+    for method in (("cocodc",) if smoke else ("streaming", "cocodc")):
+        base = min(engine_overhead(method, "host", steps=bench_steps)
+                   for _ in range(2))
+        fused = min(engine_overhead(method, "host", steps=bench_steps,
+                                    fused_updates=True)
+                    for _ in range(2))
+        jit_base = engine_overhead(method, "jit", steps=bench_steps)
+        jit_fused = engine_overhead(method, "jit", steps=bench_steps,
+                                    fused_updates=True)
+        row = {"per_leaf_s": base, "fused_s": fused,
+               "speedup": base / fused if fused > 0 else 0.0,
+               "jit_per_leaf_s": jit_base, "jit_fused_s": jit_fused}
+        emit(f"outer_update/{method}", fused * 1e6,
+             f"per_leaf={base*1e3:.2f}ms/step;fused={fused*1e3:.2f}ms/step;"
+             f"speedup={row['speedup']:.2f}x;"
+             f"jit_per_leaf={jit_base*1e3:.2f}ms/step;"
+             f"jit_fused={jit_fused*1e3:.2f}ms/step")
+        fused_rows[method] = row
+    out["outer_update"] = fused_rows
+
     # dispatch savings of the segment-scanned execution engine: full training
     # loop (data + inner step + protocol), scanned segments vs per-step.
     # "local" has no protocol events (64-step segments) — the upper bound on
@@ -284,6 +324,13 @@ def main(steps: int = 1000, smoke: bool = False) -> dict:
                 f"codec_overhead regression: codec-enabled engine step is "
                 f"{worst_codec:.2f}x the no-codec initiate "
                 f"(> {CODEC_OVERHEAD_MAX_X}x) — codec off the fused path?")
+        worst_fused = min(r["speedup"] for r in fused_rows.values())
+        if worst_fused < FUSED_MIN_SPEEDUP:
+            raise SystemExit(
+                f"outer_update regression: fused flat-plane engine step is "
+                f"only {worst_fused:.2f}x the per-leaf path in CPU oracle "
+                f"(eager) mode (< {FUSED_MIN_SPEEDUP}x) — fused deliver "
+                f"slower than the tree-map transitions it replaces")
     return out
 
 

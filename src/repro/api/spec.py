@@ -57,6 +57,7 @@ class MethodExtensions:
     wire_codec: str = "none"         # delta wire codec: none | int8 | int4
     codec_block: int = 256           # elements per absmax quantization block
     codec_error_feedback: bool = True  # EF residual folded into next initiation
+    fused_updates: bool = False      # flat-plane + kernels/outer_update engine
 
 
 @dataclass(frozen=True)
@@ -92,6 +93,7 @@ class MethodSpec:
             adaptive_resync=ext.adaptive_resync,
             wire_codec=ext.wire_codec, codec_block=ext.codec_block,
             codec_error_feedback=ext.codec_error_feedback,
+            fused_updates=ext.fused_updates,
             routing=network.routing, hub_failover=network.hub_failover,
             channel_scheduler=network.channel_scheduler,
             multipath_k=network.multipath_k)
@@ -295,6 +297,10 @@ class ExperimentSpec:
             fail(f"method.extensions.codec_block must be an even integer in "
                  f"[2, 65536] (int4 packs element pairs), "
                  f"got {ext.codec_block}")
+        if ext.fused_updates and impl.overlapped and not impl.fused_delivery:
+            fail(f"method.extensions.fused_updates requires a fused delivery "
+                 f"mode on the method; {self.method.name!r} defines none "
+                 f"(set SyncMethod.fused_delivery to 'blend' or 'compensate')")
         if self.run.loop not in ("segment", "per_step"):
             fail(f"run.loop must be 'segment' or 'per_step', "
                  f"got {self.run.loop!r}")

@@ -207,3 +207,12 @@ class CoCoDCConfig:
     # k edge-disjoint min-cost paths (inverse-cost byte shares; completion =
     # slowest subflow). 1 = single-path (bitwise-pinned arithmetic).
     multipath_k: int = 1
+    # Fused outer-update plane: route every protocol transition through the
+    # flat fragment plane (core/flatplane.py) + kernels/outer_update — one
+    # Pallas dispatch per fragment per stage instead of one per leaf per
+    # stage, and flat (rows, LANES) in-flight/residual buffers instead of
+    # full-model pytrees. Off keeps the per-leaf path bitwise (PR 7 goldens);
+    # on pins bitwise against its own pure-jnp oracle. Flat-plane semantics:
+    # top-k sparsification and codec blocks span the fragment's concatenated
+    # leaves rather than respecting leaf boundaries.
+    fused_updates: bool = False

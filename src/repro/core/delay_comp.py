@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.delay_comp.ops import delay_comp_array
+from repro.kernels.delay_comp.ops import delay_comp_array, pack_scalars
 from repro.kernels.delay_comp.ref import delay_comp_ref
 
 
@@ -24,12 +24,16 @@ def compensate(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
                impl: str = "ref"):
     """Pytree-level Algorithm 1. None leaves (absent from this fragment) pass
     through as None."""
+    # kernel path: SMEM scalar operand built once for the whole tree, not per
+    # leaf (the ref path keeps the python scalars — its traced program is
+    # golden-pinned)
+    scalars = pack_scalars(tau, lam, H, sign) if impl == "kernel" else None
 
     def fn(tl, tp, tg):
         if tl is None:
             return None
         if impl == "kernel":
-            return delay_comp_array(tl, tp, tg, tau=tau, lam=lam, H=H, sign=sign)
+            return delay_comp_array(tl, tp, tg, scalars=scalars)
         return delay_comp_ref(tl, tp, tg, tau=tau, lam=lam, H=H, sign=sign)
 
     flat_tl, treedef = jax.tree.flatten(theta_tl, is_leaf=lambda x: x is None)

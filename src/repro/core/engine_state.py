@@ -37,6 +37,7 @@ from repro.core import outer_opt
 from repro.core.fragments import Fragmenter
 from repro.core.methods import get_method
 from repro.kernels.delta_codec import ops as codec_ops
+from repro.kernels.outer_update import ops as ou_ops
 
 
 def _is_none(x):
@@ -109,6 +110,24 @@ def pseudograd_mean(frag_stack, theta_g_frag, worker_mask, *, sync_dtype,
                         out, is_leaf=_is_none)
 
 
+def flat_pseudograd_mean(stack_flat, theta_flat, worker_mask, *, sync_dtype,
+                         topk_frac: float = 1.0):
+    """`pseudograd_mean` over flat-plane buffers: stack (M, rows, LANES) vs
+    global (rows, LANES), masked mean in `sync_dtype`, back to f32 — the same
+    element-for-element arithmetic, minus the per-leaf tree-map. Top-k
+    sparsification ranks the fragment's concatenated (zero-padded) elements
+    as ONE pool instead of per leaf — a documented flat-plane semantic."""
+    sync_dt = jnp.dtype(sync_dtype)
+    maskf = jnp.asarray(worker_mask).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(maskf), 1.0)
+    d = (stack_flat - theta_flat[None]).astype(sync_dt)
+    if topk_frac < 1.0:
+        d = jax.vmap(lambda v: sparsify(v, topk_frac))(d)
+    w = maskf.reshape((-1, 1, 1)).astype(d.dtype)
+    out = jnp.sum(d * w, axis=0) / denom.astype(d.dtype)
+    return out.astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # state
 # ---------------------------------------------------------------------------
@@ -139,31 +158,57 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def init_state(method: str, ccfg: CoCoDCConfig, params_stack) -> EngineState:
-    """Build the initial state from the (identical-per-worker) params stack."""
+def init_state(method: str, ccfg: CoCoDCConfig, params_stack,
+               frag: Fragmenter | None = None) -> EngineState:
+    """Build the initial state from the (identical-per-worker) params stack.
+    With `ccfg.fused_updates` EVERY engine-owned buffer — theta_g, momentum,
+    in-flight payloads, residual — lives on the flat plane (`frag.flat` row
+    layout — `frag` is then required), so transitions touch them through
+    static row slices with no pack/unpack copies; pytree views materialize
+    only at external boundaries (`ProtocolEngine.theta_g/.momentum`). The
+    params stack stays a pytree either way (it is the inner-loop interface)."""
     K, M, H = ccfg.num_fragments, ccfg.num_workers, ccfg.local_steps
     theta_g = jax.tree.map(lambda a: a[0], params_stack)
     impl = get_method(method)
-    return EngineState(
-        theta_g=theta_g,
-        momentum=jax.tree.map(jnp.zeros_like, theta_g),
+    fused = ccfg.fused_updates
+    if fused and frag is None:
+        raise ValueError("fused_updates=True needs the Fragmenter (its flat "
+                         "plane defines the buffer layout); pass frag=")
+    ef_active = ccfg.wire_codec != "none" and ccfg.codec_error_feedback
+    if fused:
+        # flat plane: fragment-contiguous (total_rows, LANES) f32; fragment
+        # addressing is a static row slice, so extract/insert vanish —
+        # theta_g/momentum included (one pack at init, none per transition)
+        theta_g = frag.flat.pack_full(theta_g)
+        momentum = frag.flat.full_zeros()
+        inflight_delta = frag.flat.full_zeros() if impl.overlapped else None
+        inflight_snapshot = (frag.flat.full_zeros(M)
+                             if impl.keeps_snapshot else None)
+        wire_residual = frag.flat.full_zeros() if ef_active else None
+    else:
         # only overlapped methods park payloads in flight; diloco/local would
         # otherwise carry a dead full-model f32 buffer through every round
-        inflight_delta=(jax.tree.map(
+        momentum = jax.tree.map(jnp.zeros_like, theta_g)
+        inflight_delta = (jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
-            if impl.overlapped else None),
-        inflight_snapshot=(jax.tree.map(jnp.zeros_like, params_stack)
-                           if impl.keeps_snapshot else None),
+            if impl.overlapped else None)
+        inflight_snapshot = (jax.tree.map(jnp.zeros_like, params_stack)
+                             if impl.keeps_snapshot else None)
+        wire_residual = (jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
+            if ef_active else None)
+    return EngineState(
+        theta_g=theta_g,
+        momentum=momentum,
+        inflight_delta=inflight_delta,
+        inflight_snapshot=inflight_snapshot,
         inflight_active=jnp.zeros((K,), bool),
         inflight_t_init=jnp.zeros((K,), jnp.int32),
         delta_norm=jnp.zeros((K,), jnp.float32),
         last_sync=jnp.full((K,), -H, jnp.int32),
         rate=jnp.full((K,), jnp.inf, jnp.float32),
         worker_available=jnp.ones((M,), bool),
-        wire_residual=(jax.tree.map(
-            lambda a: jnp.zeros(a.shape, jnp.float32), theta_g)
-            if ccfg.wire_codec != "none" and ccfg.codec_error_feedback
-            else None),
+        wire_residual=wire_residual,
     )
 
 
@@ -205,13 +250,22 @@ class EngineFns(NamedTuple):
 
 
 def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
-                    dc_impl: str = "ref", use_jit: bool = True) -> EngineFns:
+                    dc_impl: str = "ref", use_jit: bool = True,
+                    fused_impl: str = "auto") -> EngineFns:
     """Build the transition functions. `use_jit=False` executes the identical
     pure functions eagerly (the legacy host-side path — kept for golden-
     trajectory parity tests and debugging). The method-specific pieces (does
     this method snapshot local state at initiation? how is a delivered global
     fragment folded back into worker-local state?) come from the registered
-    `SyncMethod` strategy, not from name branches."""
+    `SyncMethod` strategy, not from name branches.
+
+    With `ccfg.fused_updates` the transitions route through the flat fragment
+    plane (`frag.flat`) and kernels/outer_update: pack once, ONE fused
+    Nesterov dispatch + ONE fused deliver dispatch per fragment transition
+    (vs one delay-comp/blend call per leaf per stage), unpack once.
+    `fused_impl` is that kernel family's impl policy ("auto" = pure-jnp
+    oracle on CPU, Pallas elsewhere; "pallas" forces the kernel, interpret
+    mode on CPU — used by the dispatch-count tests)."""
     M = ccfg.num_workers
     impl = get_method(method)
     # wire codec: when active, every outgoing delta is quantized+packed and
@@ -333,6 +387,112 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
         return (dataclasses.replace(state, theta_g=new_g, momentum=new_mom,
                                     wire_residual=residual),
                 params_stack)
+
+    if ccfg.fused_updates:
+        if impl.overlapped and not impl.fused_delivery:
+            raise ValueError(
+                f"fused_updates=True: method {method!r} defines no "
+                f"fused_delivery mode (kernels/outer_update supports: "
+                f"{ou_ops.DELIVER_MODES}); run it with fused_updates=False")
+        flat = frag.flat
+
+        def initiate(state: EngineState, t, params_stack, p: int) -> EngineState:  # noqa: F811
+            """Fused initiation: theta is ALREADY flat (a free static row
+            slice); pack the worker stack's fragment once, ONE flat
+            pseudo-gradient mean, ONE codec round trip over the fragment's
+            concatenated elements, park via static row slices."""
+            r0, r1 = flat.row_span(p)
+            theta_flat = state.theta_g[r0:r1]
+            stack_flat = flat.pack_stack(params_stack, p)
+            delta = flat_pseudograd_mean(
+                stack_flat, theta_flat, state.worker_available,
+                sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+            residual = state.wire_residual
+            if codec_active:
+                d_in = (delta + residual[r0:r1] if residual is not None
+                        else delta)
+                delta = codec_ops.codec_roundtrip_array(
+                    d_in, codec=ccfg.wire_codec, block=ccfg.codec_block)
+                if residual is not None:
+                    residual = residual.at[r0:r1].set(d_in - delta)
+            snapshot = state.inflight_snapshot
+            if impl.keeps_snapshot:
+                snapshot = snapshot.at[:, r0:r1].set(stack_flat)
+            return dataclasses.replace(
+                state,
+                inflight_delta=state.inflight_delta.at[r0:r1].set(delta),
+                inflight_snapshot=snapshot,
+                inflight_active=state.inflight_active.at[p].set(True),
+                inflight_t_init=state.inflight_t_init.at[p].set(t),
+                delta_norm=state.delta_norm.at[p].set(
+                    jnp.sqrt(jnp.sum(jnp.square(delta)))),
+                wire_residual=residual,
+            )
+
+        def deliver(state: EngineState, t, params_stack, p: int):  # noqa: F811
+            """Fused delivery: the in-flight payload is already a flat row
+            slice; ONE fused Nesterov dispatch updates theta+momentum, ONE
+            fused deliver dispatch chains the method's blend/compensation
+            with offline-worker masking over the whole worker stack."""
+            r0, r1 = flat.row_span(p)
+            delta = state.inflight_delta[r0:r1]
+            theta_flat = state.theta_g[r0:r1]
+            mom_flat = state.momentum[r0:r1]
+            new_g, new_mom = ou_ops.outer_nesterov(
+                theta_flat, mom_flat, delta,
+                lr=ccfg.outer_lr, mu=ccfg.outer_momentum, impl=fused_impl)
+            local_flat = flat.pack_stack(params_stack, p)
+            snap = (state.inflight_snapshot[:, r0:r1]
+                    if impl.keeps_snapshot else None)
+            new_local = ou_ops.fused_deliver(
+                local_flat, snap, new_g, state.worker_available,
+                mode=impl.fused_delivery, impl=fused_impl,
+                **impl.fused_delivery_kwargs(
+                    ccfg, t=t, t_init=state.inflight_t_init[p]))
+            interval = jnp.maximum(1, t - state.last_sync[p]).astype(
+                jnp.float32)
+            new_state = dataclasses.replace(
+                state,
+                theta_g=state.theta_g.at[r0:r1].set(new_g),
+                momentum=state.momentum.at[r0:r1].set(new_mom),
+                inflight_active=state.inflight_active.at[p].set(False),
+                rate=state.rate.at[p].set(state.delta_norm[p] / interval),
+                last_sync=state.last_sync.at[p].set(
+                    jnp.asarray(t, jnp.int32)),
+            )
+            params_stack = flat.unpack_stack(params_stack, p, new_local)
+            return new_state, params_stack
+
+        def diloco_round(state: EngineState, params_stack):  # noqa: F811
+            """Fused blocking round: theta/momentum are already full-model
+            flat planes; the worker reset is the fused deliver kernel at
+            blend alpha=1 (broadcast + offline mask in one dispatch)."""
+            theta_flat = state.theta_g
+            stack_flat = flat.pack_full(params_stack, worker_axis=True)
+            delta = flat_pseudograd_mean(
+                stack_flat, theta_flat, state.worker_available,
+                sync_dtype=ccfg.sync_dtype, topk_frac=ccfg.sync_topk_frac)
+            residual = state.wire_residual
+            if codec_active:
+                d_in = delta + residual if residual is not None else delta
+                delta = codec_ops.codec_roundtrip_array(
+                    d_in, codec=ccfg.wire_codec, block=ccfg.codec_block)
+                if residual is not None:
+                    residual = d_in - delta
+            mom_flat = state.momentum
+            new_g, new_mom = ou_ops.outer_nesterov(
+                theta_flat, mom_flat, delta,
+                lr=ccfg.outer_lr, mu=ccfg.outer_momentum, impl=fused_impl)
+            new_local = ou_ops.fused_deliver(
+                stack_flat, None, new_g, state.worker_available,
+                mode="blend", alpha=1.0, impl=fused_impl)
+            return (dataclasses.replace(
+                        state,
+                        theta_g=new_g,
+                        momentum=new_mom,
+                        wire_residual=residual),
+                    flat.unpack_full(params_stack, new_local,
+                                     worker_axis=True))
 
     if use_jit:
         # donation elides the state/params copies on accelerators; CPU (tests)

@@ -1,0 +1,205 @@
+"""Flat fragment plane: one contiguous ``(rows, LANES)`` f32 buffer per
+fragment, with static per-leaf offsets computed once at `Fragmenter`
+construction.
+
+The per-leaf engine hot paths (outer Nesterov, Eq. 3 blending, Algorithm-1
+delay compensation, offline-worker masking) operate on the SAME elements the
+`Fragmenter` extracts — but extract/insert hand them over as a pytree, so
+every stage pays one `jax.tree.map` pass and every kernel dispatch pays its
+own ravel/pad/reshape per leaf. `FlatView` fixes the layout instead:
+
+  * fragment-major: fragment p owns the contiguous row span
+    ``[row_start(p), row_start(p) + rows(p))`` of a ``(total_rows, LANES)``
+    full-model buffer, so full-model engine buffers (``inflight_delta``,
+    ``wire_residual``, the CoCoDC snapshot) are addressed by STATIC row
+    slices — no gather, no pad, no reshape per transition;
+  * within a fragment: per-leaf chunks in pytree-flatten order at static
+    element offsets (layered leaves contribute their fragment rows, whole
+    leaves their full extent), zero-padded to a LANES multiple at the
+    fragment END only — padding never interleaves with payload, so flat
+    elementwise math matches the per-leaf math element-for-element.
+
+`pack`/`unpack` convert between the pytree world (theta_g, momentum, the
+worker params stack) and the flat plane at the transition BOUNDARY — one
+gather/concatenate per fragment instead of one pad/reshape per leaf per
+stage — and everything between (pseudo-gradient mean, codec round trip,
+fused kernels) runs on the 2D buffer directly.
+
+Construction is metadata-only (shapes from `jax.eval_shape`): building a
+`FlatView` never allocates device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 1024            # 8 sublanes x 128 lanes — the f32 TPU tile, flattened
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class _Chunk:
+    """One leaf's contribution to one fragment's flat buffer."""
+    path: str
+    offset: int                       # element offset inside the fragment
+    size: int                         # element count
+    rows: Tuple[int, ...] | None      # layered: layer indices; None = whole
+    shape: Tuple[int, ...]            # unraveled chunk shape (rows-first)
+    dtype: Any
+
+
+class FlatView:
+    """Static flat layout of a fragmented model (see module docstring).
+
+    Built by `Fragmenter.__init__` from its leaf plans; exposed as
+    ``Fragmenter.flat``. All offsets/rows are Python ints — every slice in
+    pack/unpack is static under jit.
+    """
+
+    LANES = LANES
+
+    def __init__(self, params_shape: Any, plans: Dict[str, Any], K: int,
+                 path_str_fn) -> None:
+        self.K = int(K)
+        leaves = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+        self._chunks: List[List[_Chunk]] = []
+        self._elems: List[int] = []          # payload elements per fragment
+        self._rows: List[int] = []           # padded rows per fragment
+        for p in range(self.K):
+            chunks: List[_Chunk] = []
+            off = 0
+            for path, leaf in leaves:
+                key = path_str_fn(path)
+                plan = plans[key]
+                if plan.is_layered:
+                    rows = plan.rows[p]
+                    if not rows:
+                        continue
+                    shape = (len(rows),) + tuple(int(d)
+                                                 for d in leaf.shape[1:])
+                    size = _prod(shape)
+                    chunks.append(_Chunk(key, off, size, tuple(rows), shape,
+                                         leaf.dtype))
+                elif plan.owner == p:
+                    size = _prod(leaf.shape)
+                    chunks.append(_Chunk(key, off, size, None,
+                                         tuple(int(d) for d in leaf.shape),
+                                         leaf.dtype))
+                else:
+                    continue
+                off += size
+            self._chunks.append(chunks)
+            self._elems.append(off)
+            self._rows.append(-(-off // LANES))
+        starts = np.cumsum([0] + self._rows)
+        self._row_start: List[int] = [int(s) for s in starts[:-1]]
+        self.total_rows: int = int(starts[-1])
+        self._by_path: List[Dict[str, _Chunk]] = [
+            {c.path: c for c in chunks} for chunks in self._chunks]
+
+    # ------------------------------------------------------------ geometry
+
+    def rows(self, p: int) -> int:
+        """Padded (rows, LANES) row count of fragment p's buffer."""
+        return self._rows[p]
+
+    def elems(self, p: int) -> int:
+        """Payload elements of fragment p (excludes trailing pad)."""
+        return self._elems[p]
+
+    def row_span(self, p: int) -> Tuple[int, int]:
+        """Fragment p's ``[start, stop)`` row span in the full-model plane."""
+        return self._row_start[p], self._row_start[p] + self._rows[p]
+
+    def full_zeros(self, *lead) -> jax.Array:
+        """A zeroed full-model plane buffer, optional leading dims (e.g. the
+        worker axis for the CoCoDC snapshot)."""
+        return jnp.zeros(tuple(lead) + (self.total_rows, LANES), jnp.float32)
+
+    # ---------------------------------------------------------------- pack
+
+    def pack(self, tree, p: int, *, worker_axis: bool = False) -> jax.Array:
+        """Ravel fragment p's elements of `tree` into one f32 buffer:
+        ``(rows(p), LANES)``, or ``(M, rows(p), LANES)`` with a leading
+        worker axis. Trailing pad is zero."""
+        by_path = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            by_path["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                             for q in path)] = leaf
+        lead: Tuple[int, ...] = ()
+        if worker_axis:
+            lead = (next(iter(by_path.values())).shape[0],)
+        parts = []
+        for ch in self._chunks[p]:
+            leaf = by_path[ch.path]
+            if ch.rows is not None:
+                leaf = jnp.take(leaf, jnp.asarray(ch.rows),
+                                axis=1 if worker_axis else 0)
+            parts.append(leaf.reshape(lead + (-1,)).astype(jnp.float32))
+        if not parts:
+            return jnp.zeros(lead + (0, LANES), jnp.float32)
+        flat = jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+        pad = self._rows[p] * LANES - self._elems[p]
+        if pad:
+            flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
+        return flat.reshape(lead + (self._rows[p], LANES))
+
+    def pack_stack(self, stack, p: int) -> jax.Array:
+        """`pack` with a leading worker axis: ``(M, rows(p), LANES)``."""
+        return self.pack(stack, p, worker_axis=True)
+
+    def pack_full(self, tree, *, worker_axis: bool = False) -> jax.Array:
+        """Full-model plane: every fragment's buffer stacked along the row
+        axis in fragment order — ``(total_rows, LANES)``."""
+        bufs = [self.pack(tree, p, worker_axis=worker_axis)
+                for p in range(self.K)]
+        return jnp.concatenate(bufs, axis=1 if worker_axis else 0)
+
+    # -------------------------------------------------------------- unpack
+
+    def unpack(self, tree, p: int, buf, *, worker_axis: bool = False):
+        """Write fragment p's flat buffer back into `tree` (static slices +
+        row scatters; leaves absent from p pass through untouched). Values
+        are cast back to each leaf's dtype."""
+        lead = buf.shape[:-2]
+        flat = buf.reshape(lead + (-1,))
+        by_path = self._by_path[p]
+        off = 1 if worker_axis else 0
+
+        def fn(path, leaf):
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in path)
+            ch = by_path.get(key)
+            if ch is None:
+                return leaf
+            x = flat[..., ch.offset:ch.offset + ch.size]
+            x = x.reshape(lead + ch.shape).astype(leaf.dtype)
+            if ch.rows is None:
+                return x
+            idx = jnp.asarray(ch.rows)
+            return leaf.at[:, idx].set(x) if worker_axis else leaf.at[idx].set(x)
+
+        return jax.tree_util.tree_map_with_path(fn, tree)
+
+    def unpack_stack(self, stack, p: int, buf):
+        """`unpack` with a leading worker axis."""
+        return self.unpack(stack, p, buf, worker_axis=True)
+
+    def unpack_full(self, tree, buf, *, worker_axis: bool = False):
+        """Inverse of `pack_full`: write the whole plane back into `tree`."""
+        axis = 1 if worker_axis else 0
+        for p in range(self.K):
+            r0, r1 = self.row_span(p)
+            frag = (buf[:, r0:r1] if worker_axis else buf[r0:r1])
+            tree = self.unpack(tree, p, frag, worker_axis=worker_axis)
+        return tree

@@ -96,6 +96,11 @@ class Fragmenter:
 
         self._plans: Dict[str, _LeafPlan] = {pl.path: pl for pl in plans}
         self._frag_bytes = frag_bytes
+        # flat fragment plane: static (rows, LANES) layout per fragment with
+        # per-leaf element offsets — metadata only (never allocates); the
+        # fused engine path addresses every full-model buffer through it
+        from repro.core.flatplane import FlatView
+        self.flat = FlatView(params_shape, self._plans, self.K, _path_str)
 
     def _layer_rows(self, L: int) -> Tuple[Tuple[int, ...], ...]:
         """Per-fragment layer indices for an L-deep stacked leaf."""

@@ -21,6 +21,9 @@ dispatches on:
     * `overlapped`      — parks fragment payloads in the in-flight buffers
     * `keeps_snapshot`  — records initiation-time local state (Algorithm 1)
     * `supports_adaptive_resync` — Eq. 9/10 re-derivation applies
+    * `fused_delivery`  — kernels/outer_update deliver mode ("blend" |
+      "compensate"; empty = method cannot run with `fused_updates=on`) plus
+      `fused_delivery_kwargs` for the mode's scalar operands
 
 New methods in the family (e.g. a CO2-style full-overlap local SGD,
 arXiv:2401.16265) register with `@register_method` and become selectable by
@@ -83,6 +86,9 @@ class SyncMethod:
     overlapped: bool = False
     keeps_snapshot: bool = False
     supports_adaptive_resync: bool = False
+    # kernels/outer_update deliver mode under `fused_updates` ("" = the
+    # engine rejects fused mode for this method if it is overlapped)
+    fused_delivery: str = ""
 
     # ------------------------------------------------------------ host hooks
 
@@ -104,6 +110,12 @@ class SyncMethod:
         traced under jit by `engine_state.make_engine_fns`."""
         raise NotImplementedError(
             f"method {self.name!r} parks no fragments in flight")
+
+    def fused_delivery_kwargs(self, ccfg, *, t, t_init) -> dict:
+        """Scalar operands for kernels/outer_update `fused_deliver` under
+        this method's `fused_delivery` mode. Values may be traced (e.g. the
+        ACTUAL overlap depth tau = t - t_init)."""
+        return {}
 
 
 @register_method
@@ -179,6 +191,7 @@ class StreamingDiLoCo(OverlappedMethod):
     """Streaming DiLoCo: fixed round-robin fragment schedule (one fragment
     every H/K steps), Eq. 3 blending on delivery."""
     name = "streaming"
+    fused_delivery = "blend"
 
     def sync_interval(self, eng) -> int:
         return eng.h_stream
@@ -193,6 +206,9 @@ class StreamingDiLoCo(OverlappedMethod):
                        t, t_init):
         return dc_lib.blend(local_now, g_b, alpha=ccfg.mixing_alpha)
 
+    def fused_delivery_kwargs(self, ccfg, *, t, t_init) -> dict:
+        return {"alpha": ccfg.mixing_alpha}
+
 
 @register_method
 class CoCoDC(OverlappedMethod):
@@ -202,6 +218,7 @@ class CoCoDC(OverlappedMethod):
     name = "cocodc"
     keeps_snapshot = True
     supports_adaptive_resync = True
+    fused_delivery = "compensate"
 
     def sync_interval(self, eng) -> int:
         return eng.h_cocodc
@@ -241,3 +258,8 @@ class CoCoDC(OverlappedMethod):
         return dc_lib.compensate(
             local_now, snapshot, g_b, tau=tau_actual, lam=ccfg.comp_lambda,
             H=float(ccfg.local_steps), sign=ccfg.eq4_sign, impl=dc_impl)
+
+    def fused_delivery_kwargs(self, ccfg, *, t, t_init) -> dict:
+        tau_actual = jnp.maximum(1, t - t_init).astype(jnp.float32)
+        return {"tau": tau_actual, "lam": ccfg.comp_lambda,
+                "H": float(ccfg.local_steps), "sign": ccfg.eq4_sign}

@@ -9,6 +9,11 @@ ascent along Delta:
 
 State is kept per-fragment-leaf as a full-tree momentum pytree; fragment updates
 touch only the fragment's rows (the Fragmenter hands us sub-trees).
+
+This per-leaf loop reads theta and momentum twice each per output (2 leaves x
+2 passes); under `fused_updates` the engine replaces it with ONE fused Pallas
+dispatch over the flat fragment plane (kernels/outer_update.outer_nesterov —
+same arithmetic, one read of each operand, one write of each output).
 """
 from __future__ import annotations
 

@@ -59,6 +59,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CoCoDCConfig
@@ -187,7 +188,13 @@ class ProtocolEngine:
         self.H = ccfg.local_steps
         self.tau = ccfg.overlap_depth
 
-        self.state = es.init_state(method, ccfg, params_stack)
+        # fused_updates stores theta_g/momentum as flat planes; keep the
+        # single-model leaf shapes so the pytree views can materialize at the
+        # external boundary (properties below) without touching params
+        self._model_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), params_stack)
+        self.state = es.init_state(method, ccfg, params_stack,
+                                   frag=fragmenter)
         self._fns = es.make_engine_fns(method, ccfg, fragmenter,
                                        dc_impl=dc_impl,
                                        use_jit=(engine_impl == "jit"))
@@ -292,20 +299,39 @@ class ProtocolEngine:
 
     # ------------------------------------------------------------ properties
 
+    def _materialize(self, flat_buf):
+        """Flat-plane buffer -> single-model pytree (fused_updates only).
+        unpack_full writes every fragment's rows, so a zeros template of the
+        right shapes/dtypes is sufficient."""
+        tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self._model_sds)
+        return self.frag.flat.unpack_full(tmpl, flat_buf)
+
     @property
     def theta_g(self):
+        """Consensus model as a pytree. With `fused_updates` the state holds
+        a flat plane; reads materialize a pytree copy (eval/checkpoint-rate
+        boundary, not the transition hot path)."""
+        if self.cfg.fused_updates:
+            return self._materialize(self.state.theta_g)
         return self.state.theta_g
 
     @theta_g.setter
     def theta_g(self, value):
+        if self.cfg.fused_updates:
+            value = self.frag.flat.pack_full(value)
         self.state = dataclasses.replace(self.state, theta_g=value)
 
     @property
     def momentum(self):
+        if self.cfg.fused_updates:
+            return self._materialize(self.state.momentum)
         return self.state.momentum
 
     @momentum.setter
     def momentum(self, value):
+        if self.cfg.fused_updates:
+            value = self.frag.flat.pack_full(value)
         self.state = dataclasses.replace(self.state, momentum=value)
 
     @property

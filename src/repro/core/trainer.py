@@ -103,7 +103,11 @@ CKPT_FORMAT = "trainer_state_v1"
 #     codec_error_feedback); pre-codec checkpoints upgrade to "none"
 #   v4 (PR 7) — + traffic-plane knobs (channel_scheduler, multipath_k);
 #     pre-fairshare checkpoints upgrade to the serial channel queue
-META_SCHEMA_VERSION = 4
+#   v5 (PR 8) — + fused_updates (flat-plane engine buffers change the
+#     in-flight/residual state SHAPES, so cross-mode resume must be
+#     rejected up front, not die in restore_like); pre-fused checkpoints
+#     upgrade to the per-leaf path
+META_SCHEMA_VERSION = 5
 
 
 @functools.lru_cache(maxsize=None)
@@ -442,7 +446,8 @@ class CrossRegionTrainer:
                 "wire_codec": c.wire_codec, "codec_block": c.codec_block,
                 "codec_error_feedback": c.codec_error_feedback,
                 "channel_scheduler": c.channel_scheduler,
-                "multipath_k": c.multipath_k}
+                "multipath_k": c.multipath_k,
+                "fused_updates": c.fused_updates}
 
     def _upgrade_meta(self, meta: Dict[str, Any]) -> Dict[str, Any]:
         """Single upgrade path for checkpoint meta of any prior schema
@@ -467,6 +472,8 @@ class CrossRegionTrainer:
         # pre-PR7 checkpoints predate the traffic plane: serial channel queue
         meta.setdefault("channel_scheduler", "serial")
         meta.setdefault("multipath_k", 1)
+        # pre-PR8 checkpoints predate the fused engine: per-leaf buffers
+        meta.setdefault("fused_updates", False)
         meta["schema_version"] = META_SCHEMA_VERSION
         return meta
 

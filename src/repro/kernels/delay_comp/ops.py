@@ -17,37 +17,58 @@ from repro.kernels.delay_comp.delay_comp import LANES, delay_comp_2d
 from repro.kernels.delay_comp.ref import delay_comp_ref
 
 
-def delay_comp_array(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
-                     impl: str = "auto"):
-    """Single-array fused update. tau/lam/H/sign may be python or jnp scalars."""
+def pack_scalars(tau, lam, H, sign=1.0) -> jax.Array:
+    """The kernel's (4,) f32 SMEM operand. Built ONCE per pytree call and
+    shared across leaves (the per-leaf `jnp.asarray` rebuild used to add one
+    host->device transfer + four casts per leaf per delivery)."""
+    return jnp.asarray(
+        [jnp.float32(tau), jnp.float32(lam), jnp.float32(H), jnp.float32(sign)],
+        jnp.float32)
+
+
+def delay_comp_array(theta_tl, theta_tp, theta_g, *, tau=None, lam=None,
+                     H=None, sign=1.0, impl: str = "auto", scalars=None):
+    """Single-array fused update. tau/lam/H/sign may be python or jnp scalars;
+    callers looping over a pytree pass a prebuilt `scalars` (pack_scalars)
+    instead, so the operand is materialized once, not per leaf."""
+    if scalars is None:
+        scalars = pack_scalars(tau, lam, H, sign)
     if impl == "ref" or (impl == "auto" and _is_cpu() and theta_tl.size > 1 << 20):
         # interpret mode is pure-python-per-tile; keep big CPU arrays on the oracle
-        return delay_comp_ref(theta_tl, theta_tp, theta_g, tau=tau, lam=lam, H=H,
-                              sign=sign)
+        return delay_comp_ref(theta_tl, theta_tp, theta_g, tau=scalars[0],
+                              lam=scalars[1], H=scalars[2], sign=scalars[3])
     interpret = _is_cpu()
-    shape, dtype = theta_tl.shape, theta_tl.dtype
-    n = theta_tl.size
+    # operands may be mutually broadcastable rather than identical — the
+    # engine delivers the global fragment as a (1, ...) leaf against the
+    # (M, ...) worker stack; the kernel itself wants equal tiles
+    shape = jnp.broadcast_shapes(theta_tl.shape, theta_tp.shape,
+                                 theta_g.shape)
+    dtype = theta_tl.dtype
+    n = 1
+    for d in shape:
+        n *= d
     rows = -(-n // LANES)
     pad = rows * LANES - n
 
     def prep(a):
-        flat = a.reshape(-1)
+        flat = jnp.broadcast_to(a, shape).reshape(-1)
         if pad:
             flat = jnp.pad(flat, (0, pad))
         return flat.reshape(rows, LANES)
 
-    scalars = jnp.asarray(
-        [jnp.float32(tau), jnp.float32(lam), jnp.float32(H), jnp.float32(sign)],
-        jnp.float32)
     out = delay_comp_2d(prep(theta_tl), prep(theta_tp), prep(theta_g), scalars,
                         interpret=interpret)
-    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+    if pad:
+        out = out.reshape(-1)[:n]
+    # LANES-aligned leaves skip the flatten+slice copy entirely
+    return out.reshape(shape).astype(dtype)
 
 
 def delay_comp(theta_tl, theta_tp, theta_g, *, tau, lam, H, sign=1.0,
                impl: str = "auto"):
     """Pytree-level fused delay compensation (CoCoDC Algorithm 1)."""
+    scalars = pack_scalars(tau, lam, H, sign)
     return jax.tree.map(
-        lambda tl, tp, tg: delay_comp_array(tl, tp, tg, tau=tau, lam=lam, H=H,
-                                            sign=sign, impl=impl),
+        lambda tl, tp, tg: delay_comp_array(tl, tp, tg, impl=impl,
+                                            scalars=scalars),
         theta_tl, theta_tp, theta_g)

@@ -1,0 +1,63 @@
+"""Public wrappers for the fused outer-update kernels.
+
+These operate on flat-plane buffers (core/flatplane.py) directly — callers
+(the `fused_updates` engine path, tests, benchmarks) pack once per
+transition, so unlike the other kernel families there is NO per-leaf
+ravel/pad/reshape here: inputs are already (rows, LANES)-shaped.
+
+Implementation policy (`impl`), same contract as delay_comp/delta_codec:
+  "ref"    — pure-jnp oracle (ref.py)
+  "pallas" — the fused kernel (interpret mode on CPU)
+  "auto"   — oracle on CPU (interpret mode is python-per-tile and these sit
+             on the engine's per-delivery hot path), kernel elsewhere
+The kernel matches the oracle to ~1 ulp (allclose-pinned by
+tests/test_outer_update.py); on CPU "auto" = oracle, which is what makes
+the fused engine path bitwise-deterministic in the trajectory tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import is_cpu as _is_cpu
+from repro.kernels.outer_update.outer_update import (LANES, deliver_2d,
+                                                     nesterov_2d)
+from repro.kernels.outer_update.ref import (DELIVER_MODES, deliver_ref,
+                                            nesterov_ref)
+
+
+def _use_ref(impl: str) -> bool:
+    if impl == "ref":
+        return True
+    if impl == "pallas":
+        return False
+    return _is_cpu()
+
+
+def outer_nesterov(theta, momentum, delta, *, lr, mu, impl: str = "auto"):
+    """Fused Nesterov outer step on (rows, LANES) f32 buffers.
+    Returns (theta_new, momentum_new)."""
+    if _use_ref(impl):
+        return nesterov_ref(theta, momentum, delta, lr=lr, mu=mu)
+    scalars = jnp.asarray([jnp.float32(lr), jnp.float32(mu)], jnp.float32)
+    out = nesterov_2d(theta, momentum, delta, scalars, interpret=_is_cpu())
+    return out[0], out[1]
+
+
+def fused_deliver(local, snapshot, g, avail, *, mode: str, alpha=0.0,
+                  tau=1.0, lam=0.0, H=1.0, sign=1.0, impl: str = "auto"):
+    """Fused delivery (blend|compensate + offline-worker mask) over the
+    worker-stacked fragment buffer. `local`/`snapshot`: (M, rows, LANES);
+    `g`: (rows, LANES); `avail`: (M,). tau may be a traced scalar (the
+    engine's ACTUAL overlap depth). Returns the new local stack."""
+    if mode not in DELIVER_MODES:
+        raise ValueError(f"unknown deliver mode {mode!r}; "
+                         f"options: {DELIVER_MODES}")
+    if _use_ref(impl):
+        return deliver_ref(local, snapshot, g, avail, mode=mode, alpha=alpha,
+                           tau=tau, lam=lam, H=H, sign=sign)
+    scalars = jnp.asarray([jnp.float32(alpha), jnp.float32(tau),
+                           jnp.float32(lam), jnp.float32(H),
+                           jnp.float32(sign)], jnp.float32)
+    availf = jnp.asarray(avail).astype(jnp.float32)
+    return deliver_2d(local, snapshot if mode == "compensate" else local,
+                      g, availf, scalars, mode=mode, interpret=_is_cpu())

@@ -1,0 +1,118 @@
+"""Pallas TPU kernels: fused outer-update plane (Nesterov + delivery).
+
+Two memory-bound kernels over the flat fragment plane (core/flatplane.py —
+``(rows, LANES)`` f32 buffers, fragment-contiguous):
+
+  * `nesterov_2d`   — the outer Nesterov step fused into ONE pass: reads
+    theta/momentum/delta once, writes theta'/momentum' once (the per-leaf
+    loop in core/outer_opt.py touches each leaf twice per output).
+  * `deliver_2d`    — the whole delivery stage fused into ONE pass over the
+    worker-stacked fragment: Eq. 3 blending OR Algorithm-1 delay
+    compensation, plus offline-worker masking, selected by a STATIC `mode`
+    (the blend variant never streams the snapshot operand).
+
+Tiling mirrors kernels/delay_comp: (BLOCK_ROWS, 1024) f32 VMEM tiles
+(8-sublane x 128-lane aligned); scalars ride in SMEM. `deliver_2d` adds a
+worker grid axis — block (1, block, LANES) indexed (w, i) — and reads the
+(M,) availability vector from SMEM at `pl.program_id(0)`.
+
+Arithmetic matches ref.py operation-for-operation (~1 ulp; FMA contraction
+varies between compilations); every divisor is a runtime scalar, so no
+const-division trap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+LANES = 1024            # 8 * 128
+BLOCK_ROWS = 256
+
+
+def _nesterov_kernel(scalars_ref, t_ref, m_ref, d_ref, t_out_ref, m_out_ref):
+    lr = scalars_ref[0]
+    mu = scalars_ref[1]
+    t = t_ref[...]
+    m = m_ref[...]
+    d = d_ref[...]
+    m_new = mu * m + d
+    m_out_ref[...] = m_new
+    t_out_ref[...] = t + lr * (d + mu * m_new)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nesterov_2d(theta, momentum, delta, scalars, *, interpret=False):
+    """theta/momentum/delta: (rows, LANES) f32; scalars: (2,) f32 [lr, mu].
+    Returns (theta_new, momentum_new)."""
+    rows = theta.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, block),)
+    spec = pl.BlockSpec((block, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _nesterov_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(theta.shape, theta.dtype),
+                   jax.ShapeDtypeStruct(momentum.shape, momentum.dtype)],
+        interpret=interpret,
+        name="outer_nesterov",
+    )(scalars, theta, momentum, delta)
+
+
+def _blend_kernel(scalars_ref, avail_ref, l_ref, g_ref, out_ref):
+    alpha = scalars_ref[0]
+    keep = avail_ref[pl.program_id(0)] != 0
+    l = l_ref[...]
+    new = (jnp.float32(1.0) - alpha) * l + alpha * g_ref[...][None]
+    out_ref[...] = jnp.where(keep, new, l)
+
+
+def _compensate_kernel(scalars_ref, avail_ref, l_ref, s_ref, g_ref, out_ref):
+    tau = scalars_ref[1]
+    lam = scalars_ref[2]
+    h = scalars_ref[3]
+    sign = scalars_ref[4]
+    keep = avail_ref[pl.program_id(0)] != 0
+    l = l_ref[...]
+    s = s_ref[...]
+    gb = g_ref[...][None]
+    gr = sign * (l - s) / tau
+    gc = gr + lam * gr * gr * (gb - s) / h
+    out_ref[...] = jnp.where(keep, gb + gc * tau, l)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def deliver_2d(local, snapshot, g, avail, scalars, *, mode: str,
+               interpret=False):
+    """local/snapshot: (M, rows, LANES) f32 (snapshot ignored for blend);
+    g: (rows, LANES) f32; avail: (M,) f32 (0 = offline); scalars: (5,) f32
+    [alpha, tau, lam, H, sign]. Static `mode` picks the formula."""
+    m, rows = local.shape[0], local.shape[1]
+    block = min(BLOCK_ROWS, rows)
+    grid = (m, pl.cdiv(rows, block))
+    wspec = pl.BlockSpec((1, block, LANES), lambda w, i: (w, i, 0))
+    gspec = pl.BlockSpec((block, LANES), lambda w, i: (i, 0))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    if mode == "blend":
+        kernel, in_specs, args = (
+            _blend_kernel, [smem, smem, wspec, gspec], (local, g))
+    elif mode == "compensate":
+        kernel, in_specs, args = (
+            _compensate_kernel, [smem, smem, wspec, wspec, gspec],
+            (local, snapshot, g))
+    else:
+        raise ValueError(f"unknown deliver mode {mode!r}")
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=wspec,
+        out_shape=jax.ShapeDtypeStruct(local.shape, local.dtype),
+        interpret=interpret,
+        name=f"outer_deliver_{mode}",
+    )(scalars, avail, *args)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the fused outer-update kernels.
+
+Arithmetic is written ONCE here in exactly the per-element order the Pallas
+kernels use (multiplies and divides in the same sequence), so the kernel
+tracks the oracle to ~1 ulp — residual differences are XLA FMA-contraction
+choices that vary between compilations, same as the other six kernel
+families (validated allclose at rtol 1e-5 in tests). No reciprocal-multiply
+trick is needed: every divisor (tau, H) is a runtime scalar operand in both
+paths, so XLA cannot constant-fold either side differently. The engine's
+BITWISE determinism contract on CPU rests on ops.py impl="auto" routing to
+these oracles there.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DELIVER_MODES = ("blend", "compensate")
+
+
+def nesterov_ref(theta, momentum, delta, *, lr, mu):
+    """One fused outer Nesterov step on same-shaped f32 arrays:
+
+        m_new = mu * m + d
+        t_new = t + lr * (d + mu * m_new)
+
+    Returns ``(theta_new, momentum_new)``.
+    """
+    lr = jnp.float32(lr)
+    mu = jnp.float32(mu)
+    m_new = mu * momentum + delta
+    t_new = theta + lr * (delta + mu * m_new)
+    return t_new, m_new
+
+
+def deliver_ref(local, snapshot, g, avail, *, mode: str, alpha=0.0,
+                tau=1.0, lam=0.0, H=1.0, sign=1.0):
+    """Fused delivery: fold the outer-updated global fragment `g` into every
+    worker's local fragment, then mask offline workers — one pass.
+
+      local    — (M, rows, LANES) worker-local fragment now
+      snapshot — (M, rows, LANES) initiation-time snapshot (compensate only)
+      g        — (rows, LANES) freshly outer-updated global fragment
+      avail    — (M,) worker availability (bool or 0/1)
+
+    mode="blend" (Streaming DiLoCo Eq. 3, also the DiLoCo reset at alpha=1):
+        new = (1 - alpha) * local + alpha * g
+    mode="compensate" (CoCoDC Algorithm 1, Eqs. 4-8):
+        gr  = sign * (local - snapshot) / tau
+        gc  = gr + lam * gr * gr * (g - snapshot) / H
+        new = g + gc * tau
+    Offline workers keep `local` unchanged (they re-sync on return).
+    """
+    if mode not in DELIVER_MODES:
+        raise ValueError(f"unknown deliver mode {mode!r}; "
+                         f"options: {DELIVER_MODES}")
+    gb = g[None]
+    if mode == "blend":
+        alpha = jnp.float32(alpha)
+        new = (jnp.float32(1.0) - alpha) * local + alpha * gb
+    else:
+        tau = jnp.float32(tau)
+        lam = jnp.float32(lam)
+        h = jnp.float32(H)
+        sign = jnp.float32(sign)
+        gr = sign * (local - snapshot) / tau
+        gc = gr + lam * gr * gr * (gb - snapshot) / h
+        new = gb + gc * tau
+    keep = jnp.asarray(avail).astype(jnp.float32) != 0
+    return jnp.where(keep.reshape((-1, 1, 1)), new, local)

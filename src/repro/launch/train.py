@@ -48,7 +48,8 @@ def spec_from_args(args) -> ExperimentSpec:
                adaptive_resync=args.adaptive_resync,
                wire_codec=args.wire_codec,
                codec_block=args.codec_block,
-               codec_error_feedback=args.codec_error_feedback)
+               codec_error_feedback=args.codec_error_feedback,
+               fused_updates=args.fused_updates)
     method = over(spec.method, name=args.method, num_workers=args.workers,
                   local_steps=args.H, num_fragments=args.fragments,
                   overlap_depth=args.tau, comp_lambda=args.comp_lambda,
@@ -173,6 +174,12 @@ def make_parser() -> argparse.ArgumentParser:
                     help="keep quantization residuals locally and fold them "
                          "into the next initiation of the same elements "
                          "(EF-SGD; default on)")
+    ap.add_argument("--fused-updates", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="route protocol transitions through the flat "
+                         "fragment plane + fused outer-update kernels (one "
+                         "Pallas dispatch per fragment per stage; default "
+                         "off = per-leaf path, bitwise vs prior releases)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="atomically checkpoint the FULL run state to --ckpt "

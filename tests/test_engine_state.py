@@ -318,3 +318,90 @@ def test_link_pricing_prefers_cheap_fragment():
     assert select_fragment(st, 10, costs=[10.0, 1.0]) == 1
     # without costs, ties resolve to the lowest index (Eq. 12 determinism)
     assert select_fragment(st, 10) == 0
+
+
+# ---------------------------------------------------------------------------
+# pseudograd_mean: sync_dtype cast + top-k sparsification paths
+# ---------------------------------------------------------------------------
+
+
+def _pg_inputs(M=3, shape=(4, 8)):
+    stack = {"w": jax.random.normal(jax.random.fold_in(KEY, 1),
+                                    (M,) + shape, jnp.float32)}
+    theta = {"w": jax.random.normal(jax.random.fold_in(KEY, 2), shape,
+                                    jnp.float32)}
+    return stack, theta
+
+
+def test_pseudograd_mean_sync_dtype_quantizes_the_wire():
+    """The payload crosses the WAN in sync_dtype: deltas are CAST to bf16
+    before averaging (a real quantization, not a no-op), and the result
+    returns to f32 for the outer update."""
+    stack, theta = _pg_inputs()
+    mask = jnp.ones((3,), bool)
+    out32 = es.pseudograd_mean(stack, theta, mask, sync_dtype="float32")
+    out16 = es.pseudograd_mean(stack, theta, mask, sync_dtype="bfloat16")
+    assert out16["w"].dtype == out32["w"].dtype == jnp.float32
+    # bf16 wire values are exactly representable in bf16...
+    as16 = out16["w"].astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(as16), np.asarray(out16["w"]))
+    # ...and genuinely differ from the f32 wire (quantization happened)
+    assert float(jnp.max(jnp.abs(out16["w"] - out32["w"]))) > 0.0
+    # oracle: mean of the per-worker bf16 deltas
+    d = (stack["w"] - theta["w"][None]).astype(jnp.bfloat16)
+    want = (jnp.sum(d.astype(jnp.bfloat16)
+                    * jnp.ones((3, 1, 1), jnp.bfloat16), axis=0)
+            / jnp.bfloat16(3.0)).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out16["w"]), np.asarray(want),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_pseudograd_mean_topk_sparsifies_per_worker():
+    """topk_frac keeps each worker's top |delta| entries: the averaged delta
+    has at most M*k nonzeros, and the kept entries are exactly the per-worker
+    magnitude-top-k (es.sparsify oracle)."""
+    stack, theta = _pg_inputs(M=2, shape=(4, 8))
+    mask = jnp.ones((2,), bool)
+    frac = 0.25
+    out = es.pseudograd_mean(stack, theta, mask, sync_dtype="float32",
+                             topk_frac=frac)
+    k = max(1, int(32 * frac))
+    nnz = int(jnp.sum(out["w"] != 0.0))
+    assert 0 < nnz <= 2 * k
+    d = stack["w"] - theta["w"][None]
+    want = jnp.mean(jax.vmap(lambda v: es.sparsify(v, frac))(d), axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want),
+                               rtol=1e-6, atol=0)
+
+
+def test_pseudograd_mean_masks_offline_workers():
+    """An offline worker's delta is excluded and the denominator shrinks —
+    in BOTH the per-leaf and the flat-plane implementations."""
+    stack, theta = _pg_inputs(M=3, shape=(2, 16))
+    mask = jnp.asarray([True, False, True])
+    out = es.pseudograd_mean(stack, theta, mask, sync_dtype="float32")
+    d = stack["w"] - theta["w"][None]
+    want = (d[0] + d[2]) / 2.0
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+    # flat-plane twin over the raveled buffer agrees with the same oracle
+    flat_stack = stack["w"].reshape(3, 1, 32)
+    flat_theta = theta["w"].reshape(1, 32)
+    got = es.flat_pseudograd_mean(flat_stack, flat_theta, mask,
+                                  sync_dtype="float32")
+    np.testing.assert_allclose(np.asarray(got.reshape(2, 16)),
+                               np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+def test_flat_pseudograd_mean_topk_ranks_fragment_as_one_pool():
+    """Documented flat-plane semantic: top-k ranks the fragment's
+    concatenated elements as ONE pool (per worker), not per leaf."""
+    stack = jnp.concatenate(
+        [jnp.full((1, 1, 16), 10.0), jnp.full((1, 1, 16), 0.1)],
+        axis=-1)  # one worker, one row: half big, half small entries
+    theta = jnp.zeros((1, 32))
+    out = es.flat_pseudograd_mean(stack, theta, jnp.ones((1,), bool),
+                                  sync_dtype="float32", topk_frac=0.5)
+    # the global top half is exactly the big-entry half
+    np.testing.assert_allclose(np.asarray(out[0, :16]), 10.0)
+    np.testing.assert_array_equal(np.asarray(out[0, 16:]), 0.0)

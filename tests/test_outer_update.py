@@ -1,0 +1,369 @@
+"""Flat fragment plane + fused outer-update kernels (kernels/outer_update).
+
+Covers the PR-8 acceptance contract:
+  * FlatView pack/unpack are exact inverses for every fragment strategy;
+  * the Pallas kernels track their pure-jnp oracles (allclose at the repo's
+    kernel tolerance — jit-vs-interpret FMA contraction is ~1 ulp);
+  * the fused deliver transition performs O(1) Pallas dispatches per fragment
+    (counted in the traced jaxpr) vs O(leaves) for the per-leaf kernel path;
+  * fused_updates=on reproduces the per-leaf engine bitwise on f32 configs,
+    and fused_impl="pallas" tracks fused_impl="ref" to kernel tolerance;
+  * kill/resume with fused_updates=on replays bitwise; a cross-mode resume
+    (fused checkpoint into a per-leaf trainer or vice versa) is rejected;
+  * an overlapped method without a fused_delivery mode is rejected by both
+    the engine and spec validation.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import CoCoDCConfig
+from repro.core import engine_state as es
+from repro.core import methods as methods_lib
+from repro.core.fragments import Fragmenter, make_fragmenter
+from repro.core.trainer import CrossRegionTrainer, TrainerConfig
+from repro.kernels.outer_update import ops as ou_ops
+from repro.kernels.outer_update.ref import deliver_ref, nesterov_ref
+from repro.models import api as model_api
+
+from test_engine_state import TINY, engine_for, make_stack, perturb
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _params(cfg=None):
+    return model_api.init_params(cfg or TINY, KEY)
+
+
+# ---------------------------------------------------------------------------
+# FlatView round trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", Fragmenter.STRATEGIES)
+def test_flatview_pack_unpack_roundtrip(strategy):
+    params = _params()
+    shape = jax.eval_shape(lambda: params)
+    frag = make_fragmenter(TINY, shape, 3, strategy=strategy)
+    flat = frag.flat
+    for p in range(3):
+        buf = flat.pack(params, p)
+        assert buf.shape == (flat.rows(p), flat.LANES)
+        restored = flat.unpack(params, p, buf)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     params, restored)
+        # trailing pad is zero (flat_pseudograd_mean / codec rely on it)
+        pad = flat.rows(p) * flat.LANES - flat.elems(p)
+        if pad:
+            assert float(jnp.max(jnp.abs(buf.reshape(-1)[-pad:]))) == 0.0
+
+
+@pytest.mark.parametrize("strategy", Fragmenter.STRATEGIES)
+def test_flatview_full_and_stack_roundtrip(strategy):
+    params = _params()
+    shape = jax.eval_shape(lambda: params)
+    frag = make_fragmenter(TINY, shape, 2, strategy=strategy)
+    flat = frag.flat
+
+    # full-model plane: unpack into a zeros template reproduces the tree
+    buf = flat.pack_full(params)
+    assert buf.shape == (flat.total_rows, flat.LANES)
+    tmpl = jax.tree.map(jnp.zeros_like, params)
+    restored = flat.unpack_full(tmpl, buf)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 params, restored)
+
+    # worker axis: (M, rows, LANES) per fragment and full
+    stack = make_stack(M=3)
+    for p in range(2):
+        sbuf = flat.pack_stack(stack, p)
+        assert sbuf.shape == (3, flat.rows(p), flat.LANES)
+        rs = flat.unpack_stack(stack, p, sbuf)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                     stack, rs)
+    fbuf = flat.pack_full(stack, worker_axis=True)
+    rs = flat.unpack_full(jax.tree.map(jnp.zeros_like, stack), fbuf,
+                          worker_axis=True)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), stack, rs)
+
+
+def test_flatview_offsets_are_static_and_disjoint():
+    params = _params()
+    shape = jax.eval_shape(lambda: params)
+    frag = make_fragmenter(TINY, shape, 3)
+    flat = frag.flat
+    total_elems = sum(l.size for l in jax.tree.leaves(params))
+    assert sum(flat.elems(p) for p in range(3)) == total_elems
+    spans = [flat.row_span(p) for p in range(3)]
+    assert spans[0][0] == 0 and spans[-1][1] == flat.total_rows
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 == b0              # contiguous, fragment-major, disjoint
+        assert isinstance(a0, int) and isinstance(a1, int)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+def _rand(shape, i):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, jnp.float32)
+
+
+def test_nesterov_kernel_matches_ref():
+    rows = 7
+    t, m, d = (_rand((rows, ou_ops.LANES), i) for i in range(3))
+    rg, rm = nesterov_ref(t, m, d, lr=0.7, mu=0.9)
+    kg, km = ou_ops.outer_nesterov(t, m, d, lr=0.7, mu=0.9, impl="pallas")
+    np.testing.assert_allclose(np.asarray(kg), np.asarray(rg),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(rm),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ou_ops.DELIVER_MODES)
+def test_deliver_kernel_matches_ref(mode):
+    M, rows = 3, 5
+    local = _rand((M, rows, ou_ops.LANES), 10)
+    snap = _rand((M, rows, ou_ops.LANES), 11)
+    g = _rand((rows, ou_ops.LANES), 12)
+    avail = jnp.asarray([True, False, True])
+    kw = dict(alpha=0.3, tau=3.0, lam=0.5, H=10.0, sign=1.0)
+    ref = deliver_ref(local, snap, g, avail, mode=mode, **kw)
+    out = ou_ops.fused_deliver(local, snap, g, avail, mode=mode,
+                               impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    # offline worker 1 keeps its local params exactly, both impls
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(local[1]))
+
+
+def test_deliver_rejects_unknown_mode():
+    x = jnp.zeros((1, 1, ou_ops.LANES))
+    with pytest.raises(ValueError, match="mode"):
+        ou_ops.fused_deliver(x, x, x[0], jnp.ones((1,)), mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# dispatch count: O(1) Pallas calls per fused transition vs O(leaves)
+# ---------------------------------------------------------------------------
+
+
+def _iter_subjaxprs(val):
+    if hasattr(val, "jaxpr"):                      # ClosedJaxpr
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):                     # Jaxpr
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _iter_subjaxprs(v)
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in _iter_subjaxprs(v):
+                n += _count_pallas_calls(sub)
+    return n
+
+
+def _deliver_jaxpr(ccfg, *, dc_impl="ref", fused_impl="auto"):
+    stack = make_stack(M=ccfg.num_workers)
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+    frag = make_fragmenter(TINY, shape, ccfg.num_fragments)
+    fns = es.make_engine_fns("cocodc", ccfg, frag, dc_impl=dc_impl,
+                             use_jit=True, fused_impl=fused_impl)
+    state = es.init_state("cocodc", ccfg, stack, frag=frag)
+    jaxpr = jax.make_jaxpr(lambda st, s: fns.deliver(st, 5, s, 0))(
+        state, stack)
+    return jaxpr.jaxpr
+
+
+def test_fused_deliver_is_constant_dispatch_count():
+    """The acceptance assertion: the fused deliver lowers to exactly TWO
+    Pallas dispatches (one Nesterov, one deliver) independent of the model's
+    leaf count, where the per-leaf kernel path pays one delay-comp dispatch
+    PER LEAF in the fragment."""
+    kw = dict(num_workers=2, local_steps=10, num_fragments=2, overlap_depth=2)
+    per_leaf = _count_pallas_calls(
+        _deliver_jaxpr(CoCoDCConfig(**kw), dc_impl="kernel"))
+    fused = _count_pallas_calls(
+        _deliver_jaxpr(CoCoDCConfig(fused_updates=True, **kw),
+                       fused_impl="pallas"))
+    assert fused == 2
+    # the per-leaf path dispatches once per fragment leaf — strictly more,
+    # and growing with the model's leaf count
+    n_leaves_in_frag = len(
+        [c for c in make_fragmenter(
+            TINY, jax.eval_shape(lambda: _params()), 2).flat._by_path[0]])
+    assert per_leaf == n_leaves_in_frag > fused
+
+
+def test_fused_deliver_dispatches_do_not_grow_with_depth():
+    deep = dataclasses.replace(TINY, n_layers=8)
+    stack = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (2,) + a.shape).copy(),
+        model_api.init_params(deep, KEY))
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+    frag = make_fragmenter(deep, shape, 2)
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=10, num_fragments=2,
+                        overlap_depth=2, fused_updates=True)
+    fns = es.make_engine_fns("cocodc", ccfg, frag, use_jit=True,
+                             fused_impl="pallas")
+    state = es.init_state("cocodc", ccfg, stack, frag=frag)
+    jaxpr = jax.make_jaxpr(lambda st, s: fns.deliver(st, 5, s, 0))(
+        state, stack)
+    assert _count_pallas_calls(jaxpr.jaxpr) == 2
+
+
+# ---------------------------------------------------------------------------
+# fused engine == per-leaf engine (f32, codec off) — bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["streaming", "cocodc", "diloco"])
+def test_fused_engine_bitwise_matches_per_leaf(method):
+    """Same schedule, same arithmetic order: the flat plane only changes the
+    LAYOUT, so codec-off f32 configs agree bit-for-bit with the per-leaf
+    engine — a stronger pin than the fused-vs-own-oracle requirement."""
+    eng_a, stack_a = engine_for(method, M=2, H=10, K=2, tau=2)
+    eng_b, stack_b = engine_for(method, M=2, H=10, K=2, tau=2,
+                                fused_updates=True)
+    for t in range(30):
+        stack_a = perturb(stack_a, scale=0.01)
+        stack_b = jax.tree.map(lambda a: a.copy(), stack_a)
+        stack_a = eng_a.on_step_end(t, stack_a)
+        stack_b = eng_b.on_step_end(t, stack_b)
+    for la, lb in zip(jax.tree.leaves(stack_a), jax.tree.leaves(stack_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for name in ("theta_g", "momentum"):
+        for la, lb in zip(jax.tree.leaves(getattr(eng_a, name)),
+                          jax.tree.leaves(getattr(eng_b, name))):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert eng_a.stats()["bytes_sent"] == eng_b.stats()["bytes_sent"]
+
+
+def test_fused_transitions_pallas_tracks_ref():
+    """fused_impl="pallas" (interpret on CPU) tracks fused_impl="ref" to the
+    repo's kernel tolerance across a full initiate->deliver cycle."""
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=10, num_fragments=2,
+                        overlap_depth=2, fused_updates=True)
+    stack0 = make_stack(M=2)
+    shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack0))
+    frag = make_fragmenter(TINY, shape, 2)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        fns = es.make_engine_fns("cocodc", ccfg, frag, use_jit=True,
+                                 fused_impl=impl)
+        state = es.init_state("cocodc", ccfg, stack0, frag=frag)
+        stack = perturb(stack0, scale=0.05)
+        state = fns.initiate(state, 0, stack, 0)
+        stack = perturb(stack, scale=0.01)
+        state, stack = fns.deliver(state, 4, stack, 0)
+        outs[impl] = (state, stack)
+    for a, b in zip(jax.tree.leaves(outs["ref"]),
+                    jax.tree.leaves(outs["pallas"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine/spec rejection of methods with no fused delivery mode
+# ---------------------------------------------------------------------------
+
+
+def test_fused_rejects_overlapped_method_without_delivery_mode():
+    @methods_lib.register_method
+    class _Overlap(methods_lib.SyncMethod):       # noqa: F811
+        name = "_test_overlap_nofused"
+        overlapped = True
+
+    try:
+        ccfg = CoCoDCConfig(num_workers=2, local_steps=10, num_fragments=2,
+                            overlap_depth=2, fused_updates=True)
+        stack = make_stack(M=2)
+        shape = jax.eval_shape(lambda: jax.tree.map(lambda a: a[0], stack))
+        frag = make_fragmenter(TINY, shape, 2)
+        with pytest.raises(ValueError, match="fused_delivery"):
+            es.make_engine_fns("_test_overlap_nofused", ccfg, frag)
+
+        from repro.api.spec import (ExperimentSpec, MethodExtensions,
+                                    MethodSpec)
+        spec = ExperimentSpec(method=MethodSpec(
+            name="_test_overlap_nofused",
+            extensions=MethodExtensions(fused_updates=True)))
+        with pytest.raises(ValueError, match="fused"):
+            spec.validate()
+    finally:
+        methods_lib.unregister_method("_test_overlap_nofused")
+
+
+def test_init_state_fused_requires_fragmenter():
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=10, num_fragments=2,
+                        overlap_depth=2, fused_updates=True)
+    with pytest.raises(ValueError, match="Fragmenter"):
+        es.init_state("cocodc", ccfg, make_stack(M=2))
+
+
+# ---------------------------------------------------------------------------
+# kill/resume with fused_updates=on — bitwise replay, cross-mode rejection
+# ---------------------------------------------------------------------------
+
+
+def _trainer(steps=24, loop="segment", **ccfg_kw):
+    mcfg = dataclasses.replace(get_config("paper_150m").reduced(),
+                               compute_dtype="float32")
+    ccfg = CoCoDCConfig(num_workers=2, local_steps=8, num_fragments=2,
+                        overlap_depth=2, **ccfg_kw)
+    tcfg = TrainerConfig(method="cocodc", local_batch=2, seq_len=16,
+                         total_steps=steps, warmup_steps=4, inner_lr=3e-3,
+                         eval_batch=4, seed=0, loop=loop)
+    return CrossRegionTrainer(mcfg, ccfg, tcfg)
+
+
+def test_resume_mid_flight_with_fused_updates(tmp_path):
+    """Kill/resume with fused_updates=on and a transfer on the wire replays
+    the uninterrupted run bitwise — the flat in-flight/snapshot/theta
+    buffers round-trip through the checkpoint."""
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    ref = _trainer(fused_updates=True)
+    ref.run(eval_every=8, log=lambda s: None)
+
+    tr = _trainer(fused_updates=True, loop="per_step")
+    while not tr.engine.pending:          # stop with a transfer on the wire
+        tr.train_one_step()
+    tr.save_checkpoint(ck)
+    resumed = _trainer(fused_updates=True).restore_checkpoint(ck)
+    np.testing.assert_array_equal(np.asarray(resumed.engine.state.theta_g),
+                                  np.asarray(tr.engine.state.theta_g))
+    resumed.run(eval_every=8, log=lambda s: None)
+    ra = {r["step"]: r["nll"] for r in ref.history}
+    rb = {r["step"]: r["nll"] for r in resumed.history}
+    assert set(rb) and all(ra[s] == rb[s] for s in sorted(set(ra) & set(rb)))
+    sr, ss = ref.engine.stats(), resumed.engine.stats()
+    assert sr["bytes_sent"] == ss["bytes_sent"]
+
+
+def test_fused_mismatch_rejected_on_resume(tmp_path):
+    """The flat plane changes engine-state SHAPES, so a cross-mode resume is
+    rejected up front by the trajectory-meta check (schema v5)."""
+    ck = os.path.join(tmp_path, "ck.msgpack")
+    tr = _trainer(steps=8, fused_updates=True)
+    tr.run(eval_every=8, log=lambda s: None)
+    tr.save_checkpoint(ck)
+    with pytest.raises(ValueError, match="fused_updates"):
+        _trainer(steps=8).restore_checkpoint(ck)
+    ck2 = os.path.join(tmp_path, "ck2.msgpack")
+    tr2 = _trainer(steps=8)
+    tr2.run(eval_every=8, log=lambda s: None)
+    tr2.save_checkpoint(ck2)
+    with pytest.raises(ValueError, match="fused_updates"):
+        _trainer(steps=8, fused_updates=True).restore_checkpoint(ck2)
