@@ -18,6 +18,10 @@ JSON artifacts under experiments/.
   spec_smoke  — declarative-path guard: every experiments/specs/*.json
                 round-trips + runs via repro.api.build_experiment, and the
                 CLI flag path maps onto the identical spec
+  serving     — continuous-batching vs lock-step serving (p50/p99 TTFT,
+                tok/s, occupancy) + routed failover through a hub outage;
+                gates: >= 1.3x speedup at no worse p99 TTFT, zero drops,
+                decode traced once
 """
 from __future__ import annotations
 
@@ -40,7 +44,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablations, convergence, kernels, roofline,
-                            spec_smoke, sweep, wallclock)
+                            serving, spec_smoke, sweep, wallclock)
 
     steps = 240 if args.fast else 480
     ab_steps = 120 if args.fast else 240
@@ -53,6 +57,8 @@ def main() -> None:
         "sweep": lambda: _require_zero(
             sweep.main(["--smoke"] if args.fast else []), "sweep"),
         "spec_smoke": lambda: _require_zero(spec_smoke.main(), "spec_smoke"),
+        "serving": lambda: _require_zero(
+            serving.main(["--smoke"] if args.fast else []), "serving"),
     }
     only = set(args.only.split(",")) if args.only else None
     failed = []

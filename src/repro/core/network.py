@@ -1065,6 +1065,51 @@ class RoutePlanner:
                         valid_from=float(t), valid_until=float(valid_until),
                         multiroutes=multiroutes)
 
+    # -------------------------------------------------- point-to-point routes
+
+    def point_route_at(self, t: float, src: int, dst: int):
+        """Min-cost simple route src -> dst at wall-time t for a point-to-point
+        message (a serving request/response, not a collective). Routes over
+        every non-dark region; returns (cost, hop_tuple) with the same cost
+        formula and tie-breaks the collective planner uses, or None when dst is
+        unreachable from src at t."""
+        if src == dst:
+            return (0.0, ())
+        m = self.topo.num_workers
+        eff = self.effective_bandwidth(t)
+        nodes = tuple(range(m))
+        w = self._edge_weights(eff, nodes)
+        hit = self._pair_shortest(w, nodes, src, dst)
+        if hit is None:
+            return None
+        cost, seq = hit
+        return cost, tuple(zip(seq[:-1], seq[1:]))
+
+    def point_latency_at(self, t: float, src: int, dst: int,
+                         nbytes: int) -> Optional[float]:
+        """One-way delivery latency (seconds) of an `nbytes` message src -> dst
+        at wall-time t over the min-cost route: per hop, propagation latency
+        (+ dynamics extra latency) plus nbytes / effective bandwidth. None when
+        unreachable."""
+        if src == dst:
+            return 0.0
+        hit = self.point_route_at(t, src, dst)
+        if hit is None:
+            return None
+        _, hops = hit
+        topo = self.topo
+        dyn = topo.dynamics
+        eff = self.effective_bandwidth(t)
+        total = 0.0
+        for a, b in hops:
+            if eff[a, b] <= 0.0:
+                return None
+            lat = float(topo.latency_s[a, b])
+            if dyn is not None:
+                lat += dyn.extra_latency_s(a, b, t)
+            total += lat + float(nbytes) / eff[a, b]
+        return total
+
 
 # ---------------------------------------------------------------------------
 # fair-share bandwidth scheduling (max-min water-filling over shared links)

@@ -38,7 +38,7 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr,
     k = k_ref[...].astype(jnp.float32)                  # (BC, hd)
     v = v_ref[...].astype(jnp.float32)
     kv_pos = pos_ref[...][0]                            # (BC,) int32
-    qpos = qpos_ref[0]
+    qpos = qpos_ref[pl.program_id(0)]
 
     s = q @ k.T                                         # (G, BC)
     valid = (kv_pos >= 0) & (kv_pos <= qpos)
@@ -66,8 +66,10 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr,
 def flash_decode_bkv(q, k_cache, v_cache, kv_positions, q_position, *,
                      window=None, bc=BLOCK_C, interpret=False):
     """q: (B, KV, G, hd) — query heads grouped by kv head;
-    caches: (B, KV, C, hd); kv_positions: (C,); q_position: () int32.
-    C % bc == 0. Returns (B, KV, G, hd)."""
+    caches: (B, KV, C, hd); kv_positions: (B, C) int32 (-1 = empty slot);
+    q_position: (B,) int32 — each batch lane carries its OWN position map, so
+    a slotted serving cache can decode requests at different depths in one
+    dispatch. C % bc == 0. Returns (B, KV, G, hd)."""
     B, KV, G, hd = q.shape
     C = k_cache.shape[2]
     bc = min(bc, C)
@@ -77,7 +79,7 @@ def flash_decode_bkv(q, k_cache, v_cache, kv_positions, q_position, *,
 
     q_spec = pl.BlockSpec((1, 1, G, hd), lambda b, h, c: (b, h, 0, 0))
     kv_spec = pl.BlockSpec((1, 1, bc, hd), lambda b, h, c: (b, h, c, 0))
-    pos_spec = pl.BlockSpec((1, bc), lambda b, h, c: (0, c))
+    pos_spec = pl.BlockSpec((1, bc), lambda b, h, c: (b, c))
 
     def squeeze(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, m, l, acc):
         _kernel(qpos_ref, q_ref.at[0, 0], k_ref.at[0, 0], v_ref.at[0, 0],
@@ -100,5 +102,4 @@ def flash_decode_bkv(q, k_cache, v_cache, kv_positions, q_position, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_decode_gqa",
-    )(jnp.asarray(q_position, jnp.int32)[None], q, k_cache, v_cache,
-      kv_positions[None])
+    )(jnp.asarray(q_position, jnp.int32), q, k_cache, v_cache, kv_positions)

@@ -1,5 +1,15 @@
 """Public wrapper: models' (B, C, KV, hd) cache layout -> kernel layout, padding,
-interpret mode on CPU."""
+interpret mode on CPU.
+
+Positions come in two flavors:
+  * shared     — kv_positions (C,), q_position ()   : the classic lock-step
+                 batch where every lane decodes the same step;
+  * per-slot   — kv_positions (B, C), q_position (B,): the serving slot plane,
+                 where each lane holds an independent request at its own depth
+                 (ragged occupancy, holes from slot recycling).
+Shared positions are broadcast to the per-slot form; the kernel only sees the
+per-slot layout.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,8 +21,8 @@ from repro.kernels.flash_decode.flash_decode import BLOCK_C, flash_decode_bkv
 
 def flash_decode(q, k_cache, v_cache, kv_positions, q_position, *, window=None,
                  bc=BLOCK_C):
-    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) int32 (-1 =
-    empty); q_position: () int32. Returns (B, H, hd)."""
+    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) or (B, C)
+    int32 (-1 = empty); q_position: () or (B,) int32. Returns (B, H, hd)."""
     B, H, hd = q.shape
     C, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -21,12 +31,17 @@ def flash_decode(q, k_cache, v_cache, kv_positions, q_position, *, window=None,
     pad = (-C) % bc
     kt = jnp.moveaxis(k_cache, 2, 1)                    # (B, KV, C, hd)
     vt = jnp.moveaxis(v_cache, 2, 1)
-    pos = kv_positions
+    pos = jnp.asarray(kv_positions, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], (B, C))
+    qpos = jnp.asarray(q_position, jnp.int32)
+    if qpos.ndim == 0:
+        qpos = jnp.broadcast_to(qpos[None], (B,))
     if pad:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        pos = jnp.pad(pos, (0, pad), constant_values=-1)  # masked out
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)  # masked out
     qg = q.reshape(B, KV, G, hd)
-    o = flash_decode_bkv(qg, kt, vt, pos, q_position, window=window, bc=bc,
+    o = flash_decode_bkv(qg, kt, vt, pos, qpos, window=window, bc=bc,
                          interpret=interpret)
     return o.reshape(B, H, hd)

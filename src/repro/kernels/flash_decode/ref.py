@@ -1,5 +1,6 @@
 """Oracle: one-token GQA attention over a (ring-buffer) KV cache, via the shared
-reference attention."""
+reference attention. Accepts shared (C,)/() or per-slot (B, C)/(B,) positions,
+like the kernel wrapper."""
 from __future__ import annotations
 
 from repro.models.layers import gqa_attention
@@ -7,15 +8,19 @@ from repro.models.layers import gqa_attention
 
 def flash_decode_ref(q, k_cache, v_cache, kv_positions, q_position, *,
                      window=None):
-    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) int32 (-1 =
-    empty slot); q_position: scalar int32. Returns (B, H, hd)."""
+    """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) or (B, C)
+    int32 (-1 = empty slot); q_position: () or (B,) int32. Returns (B, H, hd)."""
     import jax.numpy as jnp
     B = q.shape[0]
     C = k_cache.shape[1]
     q4 = q[:, None]                                     # (B, 1, H, hd)
-    qpos = jnp.broadcast_to(q_position[None, None], (B, 1)).astype(jnp.int32)
-    kvpos = jnp.broadcast_to(kv_positions[None], (B, C))
+    qpos = jnp.asarray(q_position, jnp.int32)
+    if qpos.ndim == 0:
+        qpos = jnp.broadcast_to(qpos[None], (B,))
+    kvpos = jnp.asarray(kv_positions, jnp.int32)
+    if kvpos.ndim == 1:
+        kvpos = jnp.broadcast_to(kvpos[None], (B, C))
     out = gqa_attention(q4, k_cache, v_cache, causal=True, window=window,
-                        q_positions=qpos, kv_positions=kvpos,
+                        q_positions=qpos[:, None], kv_positions=kvpos,
                         kv_mask=kvpos >= 0)
     return out[:, 0]

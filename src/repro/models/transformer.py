@@ -245,6 +245,135 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, *,
     return logits, new_cache
 
 
+def init_slot_cache(cfg: ModelConfig, n_slots: int, cache_len: int):
+    """Slot-plane KV cache for continuous-batching serving: unlike `init_cache`
+    (one shared position map + scalar clock for a lock-step batch), every slot
+    carries its OWN ring-buffer position map and decode position, so the plane
+    can hold requests at arbitrary, independent depths."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_slots, cache_len, cfg.n_kv_heads, hd)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "kv_pos": jnp.full((n_slots, cache_len), -1, jnp.int32),
+        "pos": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
+def decode_step_slotted(cfg: ModelConfig, params, cache, tokens, *, active,
+                        window: Optional[int] = None, attn_impl: str = "ref"):
+    """One decode step over the whole slot plane. tokens: (B,) int32 (last
+    sampled token per slot); active: (B,) bool. Inactive slots are computed
+    (the traced shapes never change with batch composition) but neither write
+    their cache row nor advance their position — their writes land on a
+    deliberately out-of-bounds column and are dropped."""
+    window = window if window is not None else cfg.attn_window
+    params = cast_params_for_compute(cfg, params)
+    pos = cache["pos"]                                  # (B,)
+    C = cache["k"].shape[2]
+    B = tokens.shape[0]
+    bidx = jnp.arange(B)
+    slot = jnp.where(active, pos % C, C)                # C -> dropped scatter
+    x = params["embed"][tokens][:, None, :].astype(jnp.dtype(cfg.compute_dtype))
+    positions = pos[:, None]                            # (B, 1)
+    kv_pos = cache["kv_pos"].at[bidx, slot].set(pos, mode="drop")
+    kv_mask = kv_pos >= 0
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = attn_qkv(h, lp["attn"], cfg, positions)
+        kc = kc.at[bidx, slot].set(k[:, 0], mode="drop")
+        vc = vc.at[bidx, slot].set(v[:, 0], mode="drop")
+        if attn_impl == "flash":
+            from repro.kernels.flash_decode import ops as fd_ops
+            o = fd_ops.flash_decode(q[:, 0], kc, vc, kv_pos, pos,
+                                    window=window)[:, None]
+        else:
+            o = gqa_attention(q, kc, vc, causal=True, window=window,
+                              q_positions=positions, kv_positions=kv_pos,
+                              kv_mask=kv_mask)
+        x = x + attn_out(o, lp["attn"], cfg)
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.moe is not None:
+            x = x + moe_lib.moe_ffn(h, lp["moe"], cfg.moe).y
+        else:
+            x = x + swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    h = rms_norm(x[:, 0], params["final_norm"], cfg.rms_eps)
+    logits = h.astype(jnp.float32) @ lm_head_weight(cfg, params).astype(jnp.float32)
+    new_cache = {"k": ks, "v": vs, "kv_pos": kv_pos,
+                 "pos": pos + active.astype(jnp.int32)}
+    return logits, new_cache
+
+
+def prefill_chunk_slotted(cfg: ModelConfig, params, cache, tokens, slot, start,
+                          n_valid, *, window: Optional[int] = None):
+    """Prefill ONE fixed-size chunk of ONE slot's prompt into the slot plane.
+
+    tokens: (Pc,) int32 (entries past n_valid ignored); slot/start/n_valid:
+    traced scalars (so admission order never retraces). Writes the chunk's K/V
+    into the slot's cache row at ring positions start..start+n_valid-1, sets
+    cache['pos'][slot] = start + n_valid, and returns (last_logits, cache)
+    where last_logits (V,) are the logits at the chunk's last valid token —
+    the first-token sampling point when the chunk completes the prompt."""
+    window = window if window is not None else cfg.attn_window
+    params = cast_params_for_compute(cfg, params)
+    C = cache["k"].shape[2]
+    Pc = tokens.shape[0]
+    ar = jnp.arange(Pc, dtype=jnp.int32)
+    positions = (start + ar)[None]                      # (1, Pc)
+    valid = ar < n_valid
+    widx = jnp.where(valid, (start + ar) % C, C)        # C -> dropped scatter
+    x = params["embed"][tokens][None].astype(jnp.dtype(cfg.compute_dtype))
+    kv_row = jax.lax.dynamic_slice_in_dim(cache["kv_pos"], slot, 1, axis=0)
+    kv_row = kv_row[0].at[widx].set(start + ar, mode="drop")[None]  # (1, C)
+    kv_mask = kv_row >= 0
+
+    k_rows = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
+    v_rows = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
+
+    def body(x, xs):
+        lp, kc, vc = xs                                 # kc/vc: (1, C, KV, hd)
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        q, k, v = attn_qkv(h, lp["attn"], cfg, positions)
+        kc = kc[0].at[widx].set(k[0], mode="drop")[None]
+        vc = vc[0].at[widx].set(v[0], mode="drop")[None]
+        # chunk queries attend over the updated row: earlier cache content plus
+        # the in-chunk prefix, both selected by position (kp <= qp)
+        o = gqa_attention(q, kc, vc, causal=True, window=window,
+                          q_positions=positions, kv_positions=kv_row,
+                          kv_mask=kv_mask)
+        x = x + attn_out(o, lp["attn"], cfg)
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.moe is not None:
+            x = x + moe_lib.moe_ffn(h, lp["moe"], cfg.moe).y
+        else:
+            x = x + swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], k_rows, v_rows))
+    last = jnp.clip(n_valid - 1, 0, Pc - 1)
+    h_last = jax.lax.dynamic_slice_in_dim(x[0], last, 1, axis=0)[0]  # (D,)
+    h_last = rms_norm(h_last, params["final_norm"], cfg.rms_eps)
+    logits = h_last.astype(jnp.float32) @ lm_head_weight(cfg, params).astype(
+        jnp.float32)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, slot, axis=1),
+        "kv_pos": jax.lax.dynamic_update_slice_in_dim(cache["kv_pos"], kv_row,
+                                                      slot, axis=0),
+        "pos": cache["pos"].at[slot].set(start + n_valid),
+    }
+    return logits, new_cache
+
+
 def prefill(cfg: ModelConfig, params, batch, *, cache_len: Optional[int] = None):
     """Run the prompt through the stack, returning (last-token logits, cache).
     Requires cache_len >= prompt length (no ring wrap during prefill)."""

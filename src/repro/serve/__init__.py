@@ -1,0 +1,18 @@
+"""Continuous-batching serving over the simulated cross-region WAN.
+
+  cache   — slotted KV-cache state + host-side slot allocator
+  engine  — ServeEngine: continuous batching vs lock-step baseline
+  router  — region-affine request routing over core.network topologies
+  traffic — seeded request-trace generator (diurnal load, skew, bursts)
+"""
+from repro.serve.cache import SlotManager, init_slot_state, reset_slot
+from repro.serve.engine import CostModel, Request, RequestRecord, ServeEngine
+from repro.serve.router import ClusterStats, RegionRouter, RoutedCluster
+from repro.serve.traffic import TrafficSpec, generate
+
+__all__ = [
+    "SlotManager", "init_slot_state", "reset_slot",
+    "CostModel", "Request", "RequestRecord", "ServeEngine",
+    "ClusterStats", "RegionRouter", "RoutedCluster",
+    "TrafficSpec", "generate",
+]

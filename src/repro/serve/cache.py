@@ -1,0 +1,128 @@
+"""Slotted KV-cache management for the continuous-batching serving engine.
+
+The device side is a fixed pool of `n_slots` decode lanes over the models'
+``(B, C, KV, hd)`` cache layout (`transformer.init_slot_cache`): every slot
+carries its own ring-buffer position map (``kv_pos`` row, -1 = empty) and
+decode position, plus the per-slot request registers the engine samples with
+(prompt buffer, RNG stream, generation counters). All shapes are fixed at
+construction — admission, recycling, and completion never change a traced
+shape, so the jitted decode step is traced exactly once no matter how batch
+composition churns.
+
+The host side (`SlotManager`) is plain bookkeeping: which slots are free,
+which request occupies which slot, and occupancy accounting. It never touches
+device memory — slot resets are part of the engine's jitted admission
+transition (`reset_slot` below), with the slot index traced so admitting to
+slot 7 reuses the trace admitting to slot 0 built.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def init_slot_state(cfg: ModelConfig, n_slots: int, cache_len: int,
+                    max_prompt: int, prefill_chunk: int) -> Dict:
+    """Full device state of the slot plane: the slotted KV cache plus per-slot
+    request registers. The prompt buffer is over-allocated by one chunk so a
+    chunk window starting anywhere in [0, max_prompt] is a static slice."""
+    st = transformer.init_slot_cache(cfg, n_slots, cache_len)
+    st.update({
+        "prompt": jnp.zeros((n_slots, max_prompt + prefill_chunk), jnp.int32),
+        "prompt_len": jnp.zeros((n_slots,), jnp.int32),
+        "prefilled": jnp.zeros((n_slots,), jnp.int32),
+        "active": jnp.zeros((n_slots,), bool),
+        "last_tok": jnp.zeros((n_slots,), jnp.int32),
+        "rng": jnp.zeros((n_slots, 2), jnp.uint32),
+        "gen_count": jnp.zeros((n_slots,), jnp.int32),
+        "gen_limit": jnp.zeros((n_slots,), jnp.int32),
+    })
+    return st
+
+
+def reset_slot(state: Dict, slot, prompt, prompt_len, gen_limit, req_key):
+    """Pure slot-admission transition (jit-compatible; `slot` traced). Clears
+    the slot's ring-buffer map (stale K/V values stay — they are masked by
+    kv_pos = -1 and overwritten as the new request fills the ring) and loads
+    the request registers. `req_key`: (2,) uint32 — the request's dedicated
+    sampling stream."""
+    C = state["kv_pos"].shape[1]
+    row = jnp.full((1, C), -1, jnp.int32)
+    return {
+        **state,
+        "kv_pos": jax.lax.dynamic_update_slice_in_dim(state["kv_pos"], row,
+                                                      slot, axis=0),
+        "pos": state["pos"].at[slot].set(0),
+        "prompt": jax.lax.dynamic_update_slice(
+            state["prompt"], prompt[None].astype(jnp.int32), (slot, 0)),
+        "prompt_len": state["prompt_len"].at[slot].set(prompt_len),
+        "prefilled": state["prefilled"].at[slot].set(0),
+        "active": state["active"].at[slot].set(False),
+        "last_tok": state["last_tok"].at[slot].set(0),
+        "rng": state["rng"].at[slot].set(req_key),
+        "gen_count": state["gen_count"].at[slot].set(0),
+        "gen_limit": state["gen_limit"].at[slot].set(gen_limit),
+    }
+
+
+@dataclasses.dataclass
+class SlotManager:
+    """Host-side slot allocator: free-list + slot -> request-id map + occupancy
+    tallies. Slots are recycled lowest-index-first so runs are deterministic."""
+    n_slots: int
+    free: List[int] = dataclasses.field(default_factory=list)
+    owner: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # occupancy accounting: sum of occupied-slot counts over decode ticks
+    occupied_ticks: int = 0
+    decode_ticks: int = 0
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if not self.free and not self.owner:
+            self.free = list(range(self.n_slots))
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def occupied(self) -> List[int]:
+        return sorted(self.owner)
+
+    def acquire(self, rid: int) -> Optional[int]:
+        """Claim the lowest free slot for request `rid`; None when full."""
+        if not self.free:
+            return None
+        self.free.sort()
+        slot = self.free.pop(0)
+        self.owner[slot] = rid
+        return slot
+
+    def release(self, slot: int) -> int:
+        """Return a slot to the pool; returns the evicted request id."""
+        if slot not in self.owner:
+            raise KeyError(f"slot {slot} is not occupied")
+        rid = self.owner.pop(slot)
+        self.free.append(slot)
+        return rid
+
+    def note_decode_tick(self, n_active: Optional[int] = None) -> None:
+        """Record one decode dispatch; `n_active` is how many slots were
+        generating (defaults to the occupied count)."""
+        self.occupied_ticks += len(self.owner) if n_active is None else n_active
+        self.decode_ticks += 1
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean generating fraction of the slot plane over decode ticks — the
+        lever continuous batching pulls (every tick pays for all n_slots)."""
+        if self.decode_ticks == 0:
+            return 0.0
+        return self.occupied_ticks / (self.decode_ticks * self.n_slots)

@@ -1,0 +1,210 @@
+"""Region-affine request routing over the simulated cross-region WAN.
+
+`RegionRouter` places model replicas on regions of a `core.network.Topology`
+and prices every request hop (origin region -> replica) and response hop
+(replica -> origin) with `RoutePlanner.point_latency_at` — the same
+latency + bytes/effective-bandwidth cost the training planner uses, replayed
+against the topology's link dynamics. When a region's links go dark the
+router fails over to the cheapest reachable replica; when NO replica is
+reachable the request is HELD and retried at the next dynamics transition
+(`LinkDynamics.next_change`), never dropped.
+
+`RoutedCluster` runs one `ServeEngine` per replica over a routed trace.
+Routing decisions depend only on each request's arrival instant (plus a
+deterministic cumulative-load tiebreak), so the cluster routes all arrivals
+in order, then drains each engine independently on its own virtual clock —
+no cross-engine event loop needed. Response hops are priced at each
+request's completion time, so a reply that finishes mid-outage pays the
+wait until the link returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.network import RoutePlanner, Topology
+from repro.serve.engine import Request, RequestRecord, ServeEngine
+
+
+class RegionRouter:
+    """Maps an origin region to the best replica at a given wall-time."""
+
+    def __init__(self, topo: Topology, replica_regions: Sequence[int], *,
+                 req_bytes: int = 2048, resp_base_bytes: int = 256,
+                 resp_bytes_per_tok: int = 8, load_penalty_s: float = 0.002,
+                 max_retries: int = 64):
+        if not replica_regions:
+            raise ValueError("need at least one replica region")
+        m = topo.num_workers
+        for r in replica_regions:
+            if not 0 <= r < m:
+                raise ValueError(f"replica region {r} outside mesh of {m}")
+        self.topo = topo
+        self.replica_regions = tuple(int(r) for r in replica_regions)
+        self.planner = RoutePlanner(topo, hub_failover=True,
+                                    ref_bytes=req_bytes)
+        self.req_bytes = int(req_bytes)
+        self.resp_base_bytes = int(resp_base_bytes)
+        self.resp_bytes_per_tok = int(resp_bytes_per_tok)
+        self.load_penalty_s = float(load_penalty_s)
+        self.max_retries = int(max_retries)
+        # the affinity baseline: which replica each origin prefers on the
+        # UNDEGRADED topology — deviations from it at route time are failovers
+        static = RoutePlanner(dataclasses.replace(topo, dynamics=None),
+                              ref_bytes=req_bytes)
+        self.primary: Dict[int, int] = {}
+        for origin in range(m):
+            best, best_lat = 0, float("inf")
+            for idx, region in enumerate(self.replica_regions):
+                lat = static.point_latency_at(0.0, origin, region,
+                                              self.req_bytes)
+                if lat is not None and lat < best_lat:
+                    best, best_lat = idx, lat
+            self.primary[origin] = best
+
+    def route(self, origin: int, t: float,
+              loads: Sequence[int]) -> Optional[Tuple[int, float]]:
+        """Cheapest reachable replica for a request from `origin` at t:
+        (replica_idx, request-hop latency). `loads` adds a deterministic
+        per-queued-request penalty so equidistant replicas share traffic.
+        None when every replica is unreachable (caller holds + retries)."""
+        best = None
+        for idx, region in enumerate(self.replica_regions):
+            lat = self.planner.point_latency_at(t, origin, region,
+                                                self.req_bytes)
+            if lat is None:
+                continue
+            score = lat + self.load_penalty_s * loads[idx]
+            if best is None or score < best[0]:
+                best = (score, idx, lat)
+        if best is None:
+            return None
+        return best[1], best[2]
+
+    def response_latency(self, replica_idx: int, origin: int, t: float,
+                         n_tokens: int) -> Tuple[float, float]:
+        """(hop latency, held wait) for a reply of `n_tokens` leaving
+        `replica_idx` at t. If the return path is dark at t, the reply waits
+        for the next dynamics transition (accumulated in the wait term)."""
+        region = self.replica_regions[replica_idx]
+        nbytes = self.resp_base_bytes + self.resp_bytes_per_tok * n_tokens
+        wait = 0.0
+        for _ in range(self.max_retries):
+            lat = self.planner.point_latency_at(t + wait, region, origin,
+                                                nbytes)
+            if lat is not None:
+                return lat, wait
+            nxt = self.next_retry(t + wait)
+            if nxt is None or nxt <= t + wait:
+                break
+            wait = nxt - t
+        raise RuntimeError(
+            f"reply {region}->{origin} unroutable past t={t + wait:.3f}s "
+            f"(no further link transitions)")
+
+    def next_retry(self, t: float) -> Optional[float]:
+        """Next instant any link's state changes after t (when a held request
+        should re-attempt routing); None if the topology is static."""
+        dyn = self.topo.dynamics
+        if dyn is None:
+            return None
+        m = self.topo.num_workers
+        pairs = [(i, j) for i in range(m) for j in range(m) if i != j]
+        return dyn.next_change(pairs, t)
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    completed: int
+    dropped: int
+    failovers: int
+    held: int
+    ttft_p50_s: float
+    ttft_p99_s: float
+    tok_per_s: float
+    per_engine: List[Dict[str, float]]
+
+
+class RoutedCluster:
+    """One ServeEngine per replica behind a RegionRouter. `run(requests)`
+    routes every arrival (holding + retrying through outages — zero drops),
+    drains each engine, then prices response hops at completion time."""
+
+    def __init__(self, cfg, params, topo: Topology,
+                 replica_regions: Sequence[int], *,
+                 router_kwargs: Optional[dict] = None, seed: int = 0,
+                 **engine_kwargs):
+        self.router = RegionRouter(topo, replica_regions,
+                                   **(router_kwargs or {}))
+        self.engines = [
+            ServeEngine(cfg, params, seed=seed + 1000 * i, **engine_kwargs)
+            for i in range(len(replica_regions))
+        ]
+        self.failovers = 0
+        self.held = 0
+
+    def run(self, requests: Sequence[Request]) -> List[RequestRecord]:
+        router = self.router
+        loads = [0] * len(self.engines)
+        assigned: List[List[Request]] = [[] for _ in self.engines]
+        meta: Dict[int, Tuple[int, float, float]] = {}   # rid -> (idx, lat, held)
+        for req in sorted(requests, key=lambda r: (r.arrival_s, r.rid)):
+            t, held_s = req.arrival_s, 0.0
+            hit = router.route(req.region, t, loads)
+            for _ in range(router.max_retries):
+                if hit is not None:
+                    break
+                nxt = router.next_retry(t)
+                if nxt is None or nxt <= t:
+                    raise RuntimeError(
+                        f"request {req.rid} from region {req.region} is "
+                        f"permanently unroutable at t={t:.3f}s")
+                held_s += nxt - t
+                t = nxt
+                hit = router.route(req.region, t, loads)
+            if hit is None:
+                raise RuntimeError(f"request {req.rid} unroutable after "
+                                   f"{router.max_retries} retries")
+            idx, lat = hit
+            loads[idx] += 1
+            if held_s > 0.0:
+                self.held += 1
+            if idx != router.primary[req.region]:
+                self.failovers += 1
+            meta[req.rid] = (idx, lat, held_s)
+            assigned[idx].append(
+                dataclasses.replace(req, arrival_s=t + lat))
+
+        out: List[RequestRecord] = []
+        for idx, eng in enumerate(self.engines):
+            for rec in eng.run_trace(assigned[idx]):
+                ridx, lat, held_s = meta[rec.rid]
+                rec.replica = ridx
+                rec.req_hop_s = lat
+                rec.held_s = held_s
+                # ttft_s/done are measured from the ORIGINAL arrival: restore
+                # it and fold the held wait + request hop into the timeline
+                rec.arrival_s -= lat + held_s
+                resp, wait = router.response_latency(
+                    ridx, rec.region, rec.done_s, len(rec.tokens))
+                rec.resp_hop_s = resp + wait
+                out.append(rec)
+        return out
+
+    def stats(self, records: Sequence[RequestRecord]) -> ClusterStats:
+        import numpy as np
+        done = [r for r in records if r.done_s is not None]
+        ttft = np.array([r.ttft_s for r in done]) if done else np.zeros(1)
+        total_tok = sum(len(r.tokens) for r in done)
+        t0 = min((r.arrival_s for r in done), default=0.0)
+        t1 = max((r.done_s + r.resp_hop_s for r in done), default=1e-9)
+        return ClusterStats(
+            completed=len(done),
+            dropped=0,
+            failovers=self.failovers,
+            held=self.held,
+            ttft_p50_s=float(np.percentile(ttft, 50)),
+            ttft_p99_s=float(np.percentile(ttft, 99)),
+            tok_per_s=total_tok / max(t1 - t0, 1e-9),
+            per_engine=[e.stats() for e in self.engines],
+        )
