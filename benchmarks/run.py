@@ -22,6 +22,9 @@ JSON artifacts under experiments/.
                 tok/s, occupancy) + routed failover through a hub outage;
                 gates: >= 1.3x speedup at no worse p99 TTFT, zero drops,
                 decode traced once
+  analysis    — static-analysis gate (src/repro/analysis): jaxpr dispatch
+                budgets, banned primitives, donation wiring, kernel-contract
+                lint; same checks as the CI static-analysis job
 """
 from __future__ import annotations
 
@@ -33,6 +36,11 @@ import traceback
 def _require_zero(code, name: str) -> None:
     if code:
         raise RuntimeError(f"{name} exited with status {code}")
+
+
+def _analysis_main() -> int:
+    from repro.analysis.__main__ import main as analysis_main
+    return analysis_main(["--smoke"])
 
 
 def main() -> None:
@@ -59,6 +67,7 @@ def main() -> None:
         "spec_smoke": lambda: _require_zero(spec_smoke.main(), "spec_smoke"),
         "serving": lambda: _require_zero(
             serving.main(["--smoke"] if args.fast else []), "serving"),
+        "analysis": lambda: _require_zero(_analysis_main(), "analysis"),
     }
     only = set(args.only.split(",")) if args.only else None
     failed = []

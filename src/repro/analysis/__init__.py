@@ -1,0 +1,22 @@
+"""Static analysis over the jitted protocol plane.
+
+Three passes, one entrypoint (`python -m repro.analysis`):
+
+  * `jaxpr_audit` — walk the traced programs of the engine transitions, the
+    segment scan, and the serve steps; enforce the dispatch/donation/
+    banned-primitive budgets declared in `budgets`;
+  * `kernel_lint` — AST contract over every `kernels/<family>/` package
+    (pure-jnp ref.py, impl="auto" ops.py, lane-aligned BlockSpecs, VMEM
+    budget) plus the repo purity lint;
+  * `retrace`     — the reusable trace-once sentinel (used live by
+    `SegmentRunner` and `ServeEngine`, not just at audit time).
+
+This package __init__ re-exports ONLY the retrace sentinel: `core.trainer`
+and `serve.engine` import it at module load, so pulling the audit machinery
+(which imports them back) in here would cycle. Import `repro.analysis.
+jaxpr_audit` / `repro.analysis.kernel_lint` / `repro.analysis.budgets`
+directly for the checkers.
+"""
+from repro.analysis.retrace import RetraceError, RetraceSentinel
+
+__all__ = ["RetraceError", "RetraceSentinel"]

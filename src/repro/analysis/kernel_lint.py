@@ -1,0 +1,349 @@
+"""Kernel-contract linter: AST checks over `src/repro/kernels/<family>/` plus
+the repo-wide purity lint.
+
+Every kernel family ships three layers, and this module makes the layering a
+machine-checked contract instead of a convention:
+
+  * ``ref.py``  — the pure-jnp oracle. MUST NOT import Pallas or touch `pl.`/
+    `pltpu` — the oracle is the semantics, and it has to run anywhere.
+  * ``ops.py``  — the public policy layer. MUST expose an ``impl="auto"``
+    dial (ref oracle | Pallas kernel, auto-resolved per backend) and gate the
+    kernel through the shared ``is_cpu()`` interpret fallback.
+  * ``<family>.py`` — the ``pl.pallas_call`` kernels. Every BlockSpec tile's
+    LAST dim must be lane-aligned (% 128 — the TPU vector lane width, see the
+    accelerator guide), and the per-kernel VMEM footprint estimate (sum of
+    each distinct BlockSpec tile constructed in the function, at f32) must
+    stay under the family's declared budget.
+
+Tile dims that are not literals resolve through (1) module-level integer
+constants (``LANES = 1024``), then (2) the family's declared ``dim_bounds``
+in ``analysis/budgets.py`` — a runtime-sized dim with no declared bound is a
+violation, and declaring the bound is the documented path for new kernels.
+``None`` dims (squeezed axes) count as 1.
+
+The purity lint walks all of ``src/repro``: no unseeded ``np.random`` module
+calls (seeded ``RandomState(seed)``/``default_rng(seed)`` constructors are
+fine), and no wall-clock imports (`time`/`datetime`) inside ``core/`` —
+simulated time is the trainer's clock, and a wall-clock read inside the
+protocol core would silently break resume determinism.
+
+All functions return violation-message lists (empty == clean).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.analysis.budgets import KERNEL_CONTRACTS, KernelContract
+
+REPO_SRC = pathlib.Path(__file__).resolve().parents[1]      # src/repro
+KERNELS_DIR = REPO_SRC / "kernels"
+
+# np.random module-level *stateful* functions (global-RNG mutation)
+_STATEFUL_NP_RANDOM = frozenset({
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "normal", "uniform", "choice", "shuffle", "permutation",
+    "standard_normal", "beta", "binomial", "poisson", "exponential",
+    "bytes", "gamma",
+})
+# constructors that are fine WHEN SEEDED (>= 1 argument)
+_SEEDED_NP_CTORS = frozenset({"RandomState", "default_rng", "Generator",
+                              "PCG64"})
+
+
+def _parse(path: pathlib.Path) -> ast.Module:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+# ---------------------------------------------------------------------------
+# dim resolution
+# ---------------------------------------------------------------------------
+
+
+def _module_int_constants(tree: ast.Module) -> Dict[str, int]:
+    consts: Dict[str, int] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            try:
+                val = ast.literal_eval(node.value)
+            except (ValueError, TypeError, SyntaxError):
+                continue
+            if isinstance(val, int) and not isinstance(val, bool):
+                consts[node.targets[0].id] = val
+    return consts
+
+
+def _resolve_dim(node: ast.expr, consts: Dict[str, int],
+                 bounds) -> Optional[int]:
+    """Static value (or declared upper bound) for one BlockSpec tile dim;
+    None if unresolvable. `None` literals (squeezed dims) resolve to 1."""
+    if isinstance(node, ast.Constant):
+        if node.value is None:
+            return 1
+        if isinstance(node.value, int) and not isinstance(node.value, bool):
+            return node.value
+        return None
+    if isinstance(node, ast.Name):
+        if node.id in consts:
+            return consts[node.id]
+        return bounds.get(node.id)
+    if isinstance(node, ast.BinOp):
+        lo = _resolve_dim(node.left, consts, bounds)
+        ro = _resolve_dim(node.right, consts, bounds)
+        if lo is None or ro is None:
+            return None
+        if isinstance(node.op, ast.Mult):
+            return lo * ro
+        if isinstance(node.op, ast.Add):
+            return lo + ro
+        if isinstance(node.op, ast.Sub):
+            return lo - ro
+        if isinstance(node.op, ast.FloorDiv) and ro:
+            return lo // ro
+        return None
+    return None
+
+
+def _dim_repr(node: ast.expr) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<dim>"
+
+
+def _iter_blockspecs(root: ast.AST):
+    """Yield every `pl.BlockSpec((...), ...)` call carrying a tuple block
+    shape (memory-space-only specs — SMEM scalar refs — have none)."""
+    for node in ast.walk(root):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name != "BlockSpec":
+            continue
+        shape = node.args[0] if node.args else None
+        if shape is None:
+            for kw in node.keywords:
+                if kw.arg == "block_shape":
+                    shape = kw.value
+        if isinstance(shape, ast.Tuple):
+            yield node, shape
+
+
+# ---------------------------------------------------------------------------
+# per-family checks
+# ---------------------------------------------------------------------------
+
+
+def _lint_ref_purity(path: pathlib.Path) -> List[str]:
+    """ref.py must be pure jnp: no pallas imports, no `pl`/`pltpu` usage."""
+    out: List[str] = []
+    tree = _parse(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if "pallas" in a.name:
+                    out.append(f"{path.name}: imports `{a.name}` — the ref "
+                               f"oracle must stay pure jnp")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            names = ", ".join(a.name for a in node.names)
+            if "pallas" in mod or "pallas" in names:
+                out.append(f"{path.name}: `from {mod} import {names}` — the "
+                           f"ref oracle must stay pure jnp")
+        elif isinstance(node, ast.Name) and node.id in ("pl", "pltpu"):
+            out.append(f"{path.name}: references `{node.id}` — the ref "
+                       f"oracle must stay pure jnp")
+    return out
+
+
+def _lint_ops_contract(path: pathlib.Path) -> List[str]:
+    """ops.py must expose impl="auto" and the is_cpu interpret fallback."""
+    out: List[str] = []
+    tree = _parse(path)
+    has_impl_auto = False
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        a = node.args
+        params = a.args + a.kwonlyargs
+        defaults = ([None] * (len(a.args) - len(a.defaults))
+                    + list(a.defaults) + list(a.kw_defaults))
+        for p, d in zip(params, defaults):
+            if (p.arg == "impl" and isinstance(d, ast.Constant)
+                    and d.value == "auto"):
+                has_impl_auto = True
+    if not has_impl_auto:
+        out.append(f"{path.name}: no public function takes impl=\"auto\" — "
+                   f"every kernel family must expose the ref|pallas|auto "
+                   f"dial (auto = oracle/interpret on CPU, kernel on "
+                   f"accelerators)")
+    src_names = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    imported = {a.asname or a.name for node in ast.walk(tree)
+                if isinstance(node, ast.ImportFrom)
+                for a in node.names}
+    if not ({"is_cpu", "_is_cpu"} & (src_names | imported)):
+        out.append(f"{path.name}: does not reference `is_cpu` — the "
+                   f"interpret-on-CPU fallback (repro.kernels.is_cpu) is "
+                   f"part of the ops contract")
+    ref_imported = any(
+        isinstance(node, ast.ImportFrom)
+        and ((node.module or "").endswith("ref")
+             or any(a.name == "ref" or a.name.endswith("_ref")
+                    or "ref" == a.name for a in node.names)
+             or any(a.name == "ref" for a in node.names))
+        for node in ast.walk(tree))
+    if not ref_imported:
+        out.append(f"{path.name}: never imports the family's ref oracle — "
+                   f"the impl=\"ref\" escape hatch must route to ref.py")
+    return out
+
+
+def _lint_blockspecs(path: pathlib.Path,
+                     contract: KernelContract) -> List[str]:
+    """Lane alignment + per-function VMEM footprint over one kernel module."""
+    out: List[str] = []
+    tree = _parse(path)
+    consts = _module_int_constants(tree)
+    bounds = dict(contract.dim_bounds)
+    groups = [(f"{path.name}::{n.name}", n) for n in tree.body
+              if isinstance(n, ast.FunctionDef)]
+    groups.append((f"{path.name}::<module>", tree))
+    seen = set()
+    for label, scope in groups:
+        vmem = 0
+        for call, shape in _iter_blockspecs(scope):
+            if id(call) in seen:
+                continue
+            seen.add(id(call))
+            dims = [(_resolve_dim(d, consts, bounds), _dim_repr(d))
+                    for d in shape.elts]
+            for val, rep in dims:
+                if val is None:
+                    out.append(
+                        f"{label}: BlockSpec dim `{rep}` is not statically "
+                        f"resolvable — declare its bound in analysis/"
+                        f"budgets.py KERNEL_CONTRACTS[...].dim_bounds")
+            if dims and dims[-1][0] is not None and dims[-1][0] % 128 != 0:
+                out.append(
+                    f"{label}: BlockSpec last dim `{dims[-1][1]}` = "
+                    f"{dims[-1][0]} is not lane-aligned (% 128 != 0) — "
+                    f"unaligned tiles pad every VMEM transfer on TPU")
+            if all(v is not None for v, _ in dims):
+                tile = 1
+                for v, _ in dims:
+                    tile *= v
+                vmem += tile * contract.dtype_bytes
+        if vmem > contract.vmem_budget_bytes:
+            out.append(
+                f"{label}: estimated VMEM footprint {vmem} B exceeds the "
+                f"family budget {contract.vmem_budget_bytes} B "
+                f"(analysis/budgets.py) — shrink the tiles or justify a "
+                f"bigger declared budget")
+    return out
+
+
+def lint_kernel_family(family_dir: pathlib.Path,
+                       contract: KernelContract) -> List[str]:
+    """Run the full contract on one `kernels/<family>/` package."""
+    out: List[str] = []
+    fam = family_dir.name
+    ref = family_dir / "ref.py"
+    ops = family_dir / "ops.py"
+    if not ref.exists():
+        out.append(f"{fam}: missing ref.py — every kernel family ships a "
+                   f"pure-jnp oracle")
+    else:
+        out.extend(f"{fam}/{v}" for v in _lint_ref_purity(ref))
+    if not ops.exists():
+        out.append(f"{fam}: missing ops.py — every kernel family ships the "
+                   f"public impl-policy wrapper")
+    else:
+        out.extend(f"{fam}/{v}" for v in _lint_ops_contract(ops))
+    for mod in sorted(family_dir.glob("*.py")):
+        if mod.name in ("ref.py", "ops.py", "__init__.py"):
+            continue
+        out.extend(f"{fam}/{v}" for v in _lint_blockspecs(mod, contract))
+    return out
+
+
+def run_kernel_lint(kernels_dir: pathlib.Path = KERNELS_DIR) -> List[str]:
+    """Lint every family package; also the coverage contract both ways
+    (a family without a declared KernelContract is a violation, as is a
+    stale contract for a family that no longer exists)."""
+    out: List[str] = []
+    families = sorted(p.name for p in kernels_dir.iterdir()
+                      if p.is_dir() and (p / "__init__.py").exists())
+    for fam in families:
+        contract = KERNEL_CONTRACTS.get(fam)
+        if contract is None:
+            out.append(f"{fam}: no KernelContract declared — add the family "
+                       f"to analysis/budgets.py KERNEL_CONTRACTS (dim "
+                       f"bounds + VMEM budget)")
+            continue
+        out.extend(lint_kernel_family(kernels_dir / fam, contract))
+    for fam in sorted(KERNEL_CONTRACTS):
+        if fam not in families:
+            out.append(f"{fam}: KernelContract declared but no such family "
+                       f"under kernels/ — remove the stale entry")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# purity lint (repo-wide)
+# ---------------------------------------------------------------------------
+
+
+def _lint_np_random(path: pathlib.Path, tree: ast.Module) -> List[str]:
+    out: List[str] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Attribute)
+                and isinstance(fn.value.value, ast.Name)
+                and fn.value.value.id in ("np", "numpy")
+                and fn.value.attr == "random"):
+            continue
+        if fn.attr in _STATEFUL_NP_RANDOM:
+            out.append(
+                f"{path}: `np.random.{fn.attr}(...)` uses the unseeded "
+                f"global RNG — thread a seeded RandomState/default_rng "
+                f"instead (determinism is what makes resume/CI gates exact)")
+        elif fn.attr in _SEEDED_NP_CTORS and not (node.args or node.keywords):
+            out.append(
+                f"{path}: `np.random.{fn.attr}()` constructed without a "
+                f"seed — pass one explicitly")
+    return out
+
+
+def _lint_wall_clock(path: pathlib.Path, tree: ast.Module) -> List[str]:
+    out: List[str] = []
+    for node in ast.walk(tree):
+        mods = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            mods = [node.module or ""]
+        for m in mods:
+            if m.split(".")[0] in ("time", "datetime"):
+                out.append(
+                    f"{path}: imports `{m}` inside core/ — the protocol "
+                    f"core runs on the simulated clock; a wall-clock read "
+                    f"here would break deterministic resume")
+    return out
+
+
+def lint_purity(root: pathlib.Path = REPO_SRC) -> List[str]:
+    out: List[str] = []
+    for path in sorted(root.rglob("*.py")):
+        tree = _parse(path)
+        rel = path.relative_to(root.parent)
+        out.extend(_lint_np_random(rel, tree))
+        if (root / "core") in path.parents:
+            out.extend(_lint_wall_clock(rel, tree))
+    return out

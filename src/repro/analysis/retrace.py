@@ -1,0 +1,78 @@
+"""Retrace sentinel: a reusable trace-once (trace-at-most-N) guard for jitted
+functions.
+
+The repo's hot paths are built so batch/schedule churn never changes a traced
+shape: the serve plane decodes over a fixed slot plane, and the segment
+runner dispatches descending power-of-two chunks so its compiled-program set
+is bounded by log2(max_segment). Those are *invariants*, and before this
+module each was asserted ad hoc (a private ``_cache_size`` probe inside
+``ServeEngine``, nothing at all on ``SegmentRunner``). ``RetraceSentinel``
+is the one shared guard: wrap the jitted function, declare the trace budget,
+and any recompile beyond it fails LOUDLY at the call that caused it —
+instead of silently costing wall-clock for the rest of the run.
+
+Usage::
+
+    fn = RetraceSentinel(jax.jit(step), name="serve.decode")        # once
+    run = RetraceSentinel(jax.jit(seg), name="trainer.segment_scan",
+                          max_traces=max_segment.bit_length())      # 2^k set
+
+The sentinel is transparent: calls pass through, and the wrapped jitted
+function stays reachable as ``.fn`` (the jaxpr auditor lowers/traces through
+it). ``trace_count`` exposes the live compiled-trace count for tests and
+benchmark gates.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+
+class RetraceError(RuntimeError):
+    """A guarded jitted function compiled more distinct traces than its
+    declared budget — some input's shape/dtype/static-arg churned."""
+
+
+class RetraceSentinel:
+    """Wrap a ``jax.jit``-compiled callable and enforce a trace budget.
+
+    Parameters
+    ----------
+    fn:         the jitted function (must expose ``_cache_size`` — i.e. the
+                object returned by ``jax.jit``, not a plain Python function).
+    name:       label used in the violation message ("serve.decode").
+    max_traces: largest allowed number of distinct compiled traces. 1 = the
+                strict trace-once contract; the segment runner declares
+                ``max_segment.bit_length()`` (one per power-of-two chunk).
+    """
+
+    def __init__(self, fn: Callable[..., Any], *, name: str,
+                 max_traces: int = 1):
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(
+                f"RetraceSentinel({name!r}) needs a jax.jit-compiled "
+                f"function (got {type(fn).__name__} with no _cache_size)")
+        if max_traces < 1:
+            raise ValueError(f"max_traces must be >= 1, got {max_traces}")
+        self.fn = fn
+        self.name = name
+        self.max_traces = int(max_traces)
+
+    @property
+    def trace_count(self) -> int:
+        """Number of distinct traces compiled so far."""
+        return self.fn._cache_size()
+
+    def check(self) -> None:
+        """Raise RetraceError if the budget is exceeded."""
+        n = self.trace_count
+        if n > self.max_traces:
+            raise RetraceError(
+                f"{self.name}: {n} distinct traces compiled, declared budget "
+                f"is {self.max_traces} — an input's shape/dtype/static arg "
+                f"is churning (each retrace recompiles and silently costs "
+                f"wall-clock)")
+
+    def __call__(self, *args, **kwargs):
+        out = self.fn(*args, **kwargs)
+        self.check()
+        return out

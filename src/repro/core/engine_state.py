@@ -249,9 +249,21 @@ class EngineFns(NamedTuple):
     diloco_round: Any
 
 
+# Declared donation per transition (argnums into the functions below). This
+# is the contract the static-analysis donation audit enforces against the
+# lowered computations (repro.analysis.jaxpr_audit.audit_donation): every
+# pytree leaf of a donated arg must carry an aliasing annotation.
+ENGINE_DONATION = {
+    "initiate": (0,),          # state
+    "deliver": (0, 2),         # state, params_stack
+    "diloco_round": (0, 1),    # state, params_stack
+}
+
+
 def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
                     dc_impl: str = "ref", use_jit: bool = True,
-                    fused_impl: str = "auto") -> EngineFns:
+                    fused_impl: str = "auto",
+                    donate: bool | None = None) -> EngineFns:
     """Build the transition functions. `use_jit=False` executes the identical
     pure functions eagerly (the legacy host-side path — kept for golden-
     trajectory parity tests and debugging). The method-specific pieces (does
@@ -496,13 +508,20 @@ def make_engine_fns(method: str, ccfg: CoCoDCConfig, frag: Fragmenter, *,
 
     if use_jit:
         # donation elides the state/params copies on accelerators; CPU (tests)
-        # does not implement donation and would warn on every call
-        can_donate = jax.default_backend() != "cpu"
-        initiate = jax.jit(initiate, static_argnames=("p",),
-                           donate_argnums=(0,) if can_donate else ())
-        deliver = jax.jit(deliver, static_argnames=("p",),
-                          donate_argnums=(0, 2) if can_donate else ())
+        # does not implement donation and would warn on every call. `donate`
+        # overrides the backend gate — the donation audit forces it on to
+        # inspect the accelerator wiring at lower time without compiling.
+        can_donate = (jax.default_backend() != "cpu" if donate is None
+                      else donate)
+        initiate = jax.jit(
+            initiate, static_argnames=("p",),
+            donate_argnums=ENGINE_DONATION["initiate"] if can_donate else ())
+        deliver = jax.jit(
+            deliver, static_argnames=("p",),
+            donate_argnums=ENGINE_DONATION["deliver"] if can_donate else ())
         diloco_round = jax.jit(
-            diloco_round, donate_argnums=(0, 1) if can_donate else ())
+            diloco_round,
+            donate_argnums=(ENGINE_DONATION["diloco_round"] if can_donate
+                            else ()))
     return EngineFns(initiate=initiate, deliver=deliver,
                      diloco_round=diloco_round)

@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.retrace import RetraceSentinel
 from repro.checkpoint.io import load_pytree, restore_like, save_pytree
 from repro.configs.base import CoCoDCConfig, ModelConfig
 from repro.core import engine_state as es
@@ -141,9 +142,21 @@ class SegmentRunner:
     DONATED to each chunk dispatch, so the buffers are updated in place instead
     of being copied per chunk; the caller always rebinds to the returned carry.
     CPU jit does not support donation (XLA warns and ignores it), so the flag
-    is gated on the backend."""
+    is gated on the backend (`donate` overrides the gate — used by the
+    static-analysis donation audit to inspect the accelerator wiring).
 
-    def __init__(self, single_step):
+    The power-of-two contract is ENFORCED, not just relied on: the jitted
+    scan is wrapped in a `RetraceSentinel` with budget log2(max_segment)+1
+    (one compiled program per chunk length 1, 2, ..., max_segment), so an
+    event-gap-induced recompile beyond that set fails loudly at the call
+    that caused it instead of silently recompiling all run long."""
+
+    DONATE_ARGNUMS = (0, 1)              # params_stack, opt_state (scan carry)
+
+    def __init__(self, single_step, *, max_segment: int = 64,
+                 donate: bool | None = None):
+        self.single_step = single_step
+        self.max_segment = int(max_segment)
         vstep = jax.vmap(single_step, in_axes=(0, 0, 0, None))
 
         def run_segment(params_stack, opt_state, batch_seg, lrs):
@@ -156,8 +169,17 @@ class SegmentRunner:
                 body, (params_stack, opt_state), (batch_seg, lrs))
             return p, o, losses          # losses: (n, M)
 
-        donate = () if jax.default_backend() == "cpu" else (0, 1)
-        self._fn = jax.jit(run_segment, donate_argnums=donate)
+        can_donate = (jax.default_backend() != "cpu" if donate is None
+                      else donate)
+        self._fn = RetraceSentinel(
+            jax.jit(run_segment,
+                    donate_argnums=self.DONATE_ARGNUMS if can_donate else ()),
+            name="trainer.segment_scan",
+            max_traces=max(1, self.max_segment.bit_length()))
+
+    @property
+    def trace_count(self) -> int:
+        return self._fn.trace_count
 
     def __call__(self, params_stack, opt_state, batch_seg, lrs):
         n = int(lrs.shape[0])
@@ -235,7 +257,8 @@ class CrossRegionTrainer:
 
         self._train_step = jax.jit(jax.vmap(single_step,
                                             in_axes=(0, 0, 0, None)))
-        self.segment_runner = SegmentRunner(single_step)
+        self.segment_runner = SegmentRunner(single_step,
+                                            max_segment=tcfg.max_segment)
 
         def eval_loss(params, batch):
             loss, metrics = api.loss_fn(mcfg, params, batch)

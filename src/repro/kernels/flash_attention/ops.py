@@ -8,12 +8,19 @@ import jax.numpy as jnp
 from repro.kernels import is_cpu
 from repro.kernels.flash_attention.flash_attention import (DEFAULT_BK, DEFAULT_BQ,
                                                            flash_attention_bhsd)
+from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, bq=DEFAULT_BQ,
-                    bk=DEFAULT_BK):
+                    bk=DEFAULT_BK, impl: str = "auto"):
     """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) — the models' layout.
-    Pads S to block multiples, transposes to (B, H, S, hd) for the kernel."""
+    Pads S to block multiples, transposes to (B, H, S, hd) for the kernel.
+    `impl`: "ref" = pure-jnp oracle; "auto"/"pallas" = Pallas kernel
+    (interpret mode on CPU)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto|pallas|ref")
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
     interpret = is_cpu()

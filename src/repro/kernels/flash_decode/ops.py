@@ -17,12 +17,20 @@ import jax.numpy as jnp
 
 from repro.kernels import is_cpu
 from repro.kernels.flash_decode.flash_decode import BLOCK_C, flash_decode_bkv
+from repro.kernels.flash_decode.ref import flash_decode_ref
 
 
 def flash_decode(q, k_cache, v_cache, kv_positions, q_position, *, window=None,
-                 bc=BLOCK_C):
+                 bc=BLOCK_C, impl: str = "auto"):
     """q: (B, H, hd); caches: (B, C, KV, hd); kv_positions: (C,) or (B, C)
-    int32 (-1 = empty); q_position: () or (B,) int32. Returns (B, H, hd)."""
+    int32 (-1 = empty); q_position: () or (B,) int32. Returns (B, H, hd).
+    `impl`: "ref" = pure-jnp oracle; "auto"/"pallas" = Pallas kernel
+    (interpret mode on CPU)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto|pallas|ref")
+    if impl == "ref":
+        return flash_decode_ref(q, k_cache, v_cache, kv_positions, q_position,
+                                window=window)
     B, H, hd = q.shape
     C, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV

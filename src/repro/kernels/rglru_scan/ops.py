@@ -5,11 +5,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import is_cpu
+from repro.kernels.rglru_scan.ref import lru_scan_ref
 from repro.kernels.rglru_scan.rglru_scan import BLOCK_D, BLOCK_T, lru_scan_btd
 
 
-def lru_scan(a, b, h0=None, *, bt=BLOCK_T, bd=BLOCK_D):
-    """a, b: (B, T, D) — h_t = a_t h_{t-1} + b_t. Returns h: (B, T, D) f32."""
+def lru_scan(a, b, h0=None, *, bt=BLOCK_T, bd=BLOCK_D, impl: str = "auto"):
+    """a, b: (B, T, D) — h_t = a_t h_{t-1} + b_t. Returns h: (B, T, D) f32.
+    `impl`: "ref" = pure-jnp oracle; "auto"/"pallas" = chunked Pallas scan
+    (interpret mode on CPU)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto|pallas|ref")
+    if impl == "ref":
+        return lru_scan_ref(a, b, h0)
     B, T, D = a.shape
     a = a.astype(jnp.float32)
     b = b.astype(jnp.float32)

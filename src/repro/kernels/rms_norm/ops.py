@@ -5,11 +5,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import is_cpu
+from repro.kernels.rms_norm.ref import rms_norm_ref
 from repro.kernels.rms_norm.rms_norm import BLOCK_ROWS, rms_norm_2d
 
 
-def rms_norm(x, weight, eps: float = 1e-5):
-    """x: (..., D); weight: (D,). Fused Pallas RMSNorm."""
+def rms_norm(x, weight, eps: float = 1e-5, *, impl: str = "auto"):
+    """x: (..., D); weight: (D,). Fused Pallas RMSNorm. `impl`: "ref" =
+    pure-jnp oracle; "auto"/"pallas" = kernel (interpret mode on CPU)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto|pallas|ref")
+    if impl == "ref":
+        return rms_norm_ref(x, weight, eps=eps)
     interpret = is_cpu()
     shape = x.shape
     D = shape[-1]

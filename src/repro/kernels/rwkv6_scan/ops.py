@@ -5,12 +5,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import is_cpu
+from repro.kernels.rwkv6_scan.ref import wkv_scan_ref
 from repro.kernels.rwkv6_scan.rwkv6_scan import BLOCK_T, wkv_scan_bht
 
 
-def wkv_scan(r, k, v, w, u, s0=None, *, bt=BLOCK_T):
+def wkv_scan(r, k, v, w, u, s0=None, *, bt=BLOCK_T, impl: str = "auto"):
     """r,k,v,w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd) f32 or None.
-    Returns (o: (B, T, H, hd), sT: (B, H, hd, hd) f32)."""
+    Returns (o: (B, T, H, hd), sT: (B, H, hd, hd) f32). `impl`: "ref" =
+    pure-jnp oracle; "auto"/"pallas" = Pallas kernel (interpret on CPU)."""
+    if impl not in ("auto", "pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; options: auto|pallas|ref")
+    if impl == "ref":
+        return wkv_scan_ref(r, k, v, w, u, s0)
     B, T, H, hd = r.shape
     interpret = is_cpu()
     bt = min(bt, T)

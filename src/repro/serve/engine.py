@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import RetraceSentinel
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.serve import cache as cache_lib
@@ -233,19 +234,25 @@ class ServeEngine:
                    "active": active & ~finished}
             return new, toks, finished
 
+        # trace-once is ENFORCED per engine, not just asserted in tests: the
+        # shared RetraceSentinel (repro.analysis.retrace) fails the exact
+        # call whose input churned a traced shape/dtype, for all three steps
         donate = () if jax.default_backend() == "cpu" else (0,)
         donate1 = () if jax.default_backend() == "cpu" else (1,)
-        self._admit_fn = jax.jit(admit, donate_argnums=donate)
-        self._prefill_fn = jax.jit(prefill, donate_argnums=donate1)
-        self._decode_fn = jax.jit(decode, donate_argnums=donate1)
+        self._admit_fn = RetraceSentinel(
+            jax.jit(admit, donate_argnums=donate), name="serve.admit")
+        self._prefill_fn = RetraceSentinel(
+            jax.jit(prefill, donate_argnums=donate1), name="serve.prefill")
+        self._decode_fn = RetraceSentinel(
+            jax.jit(decode, donate_argnums=donate1), name="serve.decode")
 
     def decode_trace_count(self) -> int:
         """Number of distinct traces the decode step has compiled — the
         zero-recompile contract says this stays 1 across any batch churn."""
-        return self._decode_fn._cache_size()
+        return self._decode_fn.trace_count
 
     def prefill_trace_count(self) -> int:
-        return self._prefill_fn._cache_size()
+        return self._prefill_fn.trace_count
 
     # --------------------------------------------------------------- intake
 
@@ -282,8 +289,10 @@ class ServeEngine:
         P = int(np.asarray(req.prompt).shape[0])
         buf = np.zeros((self.max_prompt + self.prefill_chunk,), np.int32)
         buf[:P] = np.asarray(req.prompt, np.int32)
+        # int() coercions: an np-int scalar here would trace a distinct dtype
+        # and trip the admit sentinel — the guard's first real catch
         self.state = self._admit_fn(self.state, slot, buf, P,
-                                    req.max_new_tokens, req.rid)
+                                    int(req.max_new_tokens), int(req.rid))
         self.clock += self.cost.admit_s
 
     def _prefill_one(self, rec: RequestRecord) -> None:

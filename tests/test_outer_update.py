@@ -154,25 +154,9 @@ def test_deliver_rejects_unknown_mode():
 # ---------------------------------------------------------------------------
 
 
-def _iter_subjaxprs(val):
-    if hasattr(val, "jaxpr"):                      # ClosedJaxpr
-        yield val.jaxpr
-    elif hasattr(val, "eqns"):                     # Jaxpr
-        yield val
-    elif isinstance(val, (tuple, list)):
-        for v in val:
-            yield from _iter_subjaxprs(v)
-
-
-def _count_pallas_calls(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for sub in _iter_subjaxprs(v):
-                n += _count_pallas_calls(sub)
-    return n
+# the canonical jaxpr walker lives in the static-analysis subsystem now —
+# one implementation, shared by these tests and `python -m repro.analysis`
+from repro.analysis.jaxpr_audit import count_pallas_calls as _count_pallas_calls  # noqa: E402
 
 
 def _deliver_jaxpr(ccfg, *, dc_impl="ref", fused_impl="auto"):
